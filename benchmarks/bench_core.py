@@ -1,0 +1,173 @@
+"""Mercury microbenchmarks — one per CLUSTER'13 evaluation axis.
+
+1. small-RPC round-trip latency vs the raw transport round-trip
+   (paper claim: the RPC layer adds small, flat overhead);
+2. bulk transfer bandwidth vs size, eager vs rendezvous crossover and
+   pipelining depth (paper claim: bulk approaches raw bandwidth);
+3. RPC rate vs in-flight concurrency (the callback/CQ model's point).
+"""
+from __future__ import annotations
+
+import socket
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.bulk import BulkDescriptor
+from repro.core.executor import Engine
+
+
+def _raw_tcp_rtt(n: int = 200, payload: int = 64) -> float:
+    """Baseline: bare non-blocking-free socket ping-pong, seconds/rt."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    stop = threading.Event()
+
+    def serve():
+        conn, _ = srv.accept()
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while not stop.is_set():
+            try:
+                data = conn.recv(65536)
+            except OSError:
+                return
+            if not data:
+                return
+            conn.sendall(data)
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    cli = socket.create_connection(("127.0.0.1", port))
+    cli.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    msg = b"x" * payload
+    cli.sendall(msg)
+    cli.recv(65536)                     # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        cli.sendall(msg)
+        got = b""
+        while len(got) < payload:
+            got += cli.recv(65536)
+    dt = (time.perf_counter() - t0) / n
+    stop.set()
+    cli.close()
+    srv.close()
+    return dt
+
+
+def bench_latency() -> Dict:
+    """RPC round-trip latency (self + tcp) vs raw socket ping-pong."""
+    out: Dict = {"name": "rpc_latency"}
+    out["raw_tcp_rtt_us"] = _raw_tcp_rtt() * 1e6
+
+    for plugin, uri in [("self", None), ("tcp", "tcp://127.0.0.1:0")]:
+        with Engine(uri) as srv, \
+                (Engine("tcp://127.0.0.1:0") if plugin == "tcp" else srv) \
+                as cli:
+            srv.register("ping", lambda x: x)
+            srv.register("ping_inline", lambda x: x, inline=True)
+            for name, key in (("ping", f"{plugin}_rtt_us"),
+                              ("ping_inline", f"{plugin}_inline_rtt_us")):
+                cli.call(srv.uri, name, b"x" * 64)       # warm
+                samples = []
+                for _ in range(200):
+                    t0 = time.perf_counter()
+                    cli.call(srv.uri, name, b"x" * 64)
+                    samples.append(time.perf_counter() - t0)
+                out[key] = statistics.median(samples) * 1e6
+            if plugin == "tcp":
+                out["tcp_overhead_x"] = out["tcp_rtt_us"] / \
+                    max(out["raw_tcp_rtt_us"], 1e-9)
+    return out
+
+
+def bench_bandwidth(sizes=(4 << 10, 64 << 10, 1 << 20, 16 << 20, 64 << 20),
+                    chunks=(256 << 10, 4 << 20),
+                    inflights=(1, 4)) -> Dict:
+    """Bulk GET bandwidth vs size × pipelining; eager RPC for contrast."""
+    out: Dict = {"name": "bulk_bandwidth", "points": []}
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        srv.register("eager", lambda x: x)
+
+        for size in sizes:
+            src = np.random.default_rng(0).integers(
+                0, 255, size=size, dtype=np.uint8)
+            h = srv.expose([src])
+            desc = h.descriptor()
+            for chunk in chunks:
+                for infl in inflights:
+                    dst = np.zeros_like(src)
+                    lh = cli.expose([dst])
+                    t0 = time.perf_counter()
+                    cli.pull(srv.uri, desc, lh, chunk_size=chunk,
+                             max_inflight=infl)
+                    dt = time.perf_counter() - t0
+                    lh.free()
+                    assert np.array_equal(dst, src)
+                    out["points"].append({
+                        "size": size, "mode": "bulk", "chunk": chunk,
+                        "inflight": infl, "MBps": size / dt / 1e6})
+            h.free()
+            if size <= (16 << 20):
+                payload = bytes(src[:size])
+                t0 = time.perf_counter()
+                got = cli.call(srv.uri, "eager", payload, timeout=120)
+                dt = time.perf_counter() - t0
+                out["points"].append({"size": size, "mode": "eager",
+                                      "MBps": 2 * size / dt / 1e6})
+    return out
+
+
+def bench_rate(inflight_levels=(1, 2, 8, 32, 128)) -> Dict:
+    """Small-RPC throughput vs number of in-flight requests."""
+    out: Dict = {"name": "rpc_rate", "points": []}
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        srv.register("tick", lambda x: x + 1)
+        cli.call(srv.uri, "tick", 0)
+        N = 600
+        for infl in inflight_levels:
+            t0 = time.perf_counter()
+            done = 0
+            pending = []
+            i = 0
+            while done < N:
+                while len(pending) < infl and i < N:
+                    pending.append(cli.call_async(srv.uri, "tick", i))
+                    i += 1
+                pending[0].result(timeout=30)
+                pending.pop(0)
+                done += 1
+            dt = time.perf_counter() - t0
+            out["points"].append({"inflight": infl, "rps": N / dt})
+    return out
+
+
+def run_all(verbose=True) -> List[Dict]:
+    results = [bench_latency(), bench_bandwidth(), bench_rate()]
+    if verbose:
+        lat = results[0]
+        print(f"[latency] raw tcp rtt {lat['raw_tcp_rtt_us']:.0f}us | "
+              f"mercury self {lat['self_rtt_us']:.0f}us "
+              f"(inline {lat['self_inline_rtt_us']:.0f}us) | "
+              f"mercury tcp {lat['tcp_rtt_us']:.0f}us "
+              f"(inline {lat['tcp_inline_rtt_us']:.0f}us, "
+              f"{lat['tcp_overhead_x']:.2f}x raw)")
+        print("[bandwidth] (size, mode, chunk, inflight) -> MB/s")
+        for p in results[1]["points"]:
+            if p["mode"] == "bulk":
+                print(f"   {p['size'] >> 10:8d}KiB bulk  c={p['chunk'] >> 10}KiB "
+                      f"i={p['inflight']}  {p['MBps']:8.0f}")
+            else:
+                print(f"   {p['size'] >> 10:8d}KiB eager              "
+                      f"{p['MBps']:8.0f}")
+        print("[rate] inflight -> req/s")
+        for p in results[2]["points"]:
+            print(f"   {p['inflight']:4d} -> {p['rps']:7.0f}")
+    return results

@@ -1,0 +1,103 @@
+"""Service-level benchmarks: checkpoint push/pull throughput (bulk layer
+under a real workload), datafeed eager/bulk crossover, serving gateway
+tokens/s vs slot count."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.executor import Engine
+from repro.data.pipeline import SyntheticSource
+from repro.models import Model, unzip
+from repro.serve.engine import ServeEngine
+from repro.services import (CheckpointClient, CheckpointServer,
+                            DataFeedClient, DataFeedServer, ServingGateway)
+
+
+def bench_checkpoint(sizes_mb=(4, 32, 128)) -> Dict:
+    out: Dict = {"name": "checkpoint", "points": []}
+    with Engine("tcp://127.0.0.1:0") as srv_e, \
+            Engine("tcp://127.0.0.1:0") as cli_e:
+        CheckpointServer(srv_e)
+        cli = CheckpointClient(cli_e, srv_e.uri)
+        for mb in sizes_mb:
+            n = mb * (1 << 20) // 4
+            tree = {"w": np.random.default_rng(0)
+                    .standard_normal(n).astype(np.float32)}
+            t0 = time.perf_counter()
+            cli.save("bench", mb, tree)
+            t_save = time.perf_counter() - t0
+            tpl = {"w": np.zeros(n, np.float32)}
+            t0 = time.perf_counter()
+            restored, _ = cli.restore("bench", tpl, step=mb)
+            t_load = time.perf_counter() - t0
+            assert np.array_equal(restored["w"], tree["w"])
+            out["points"].append({
+                "MB": mb,
+                "save_MBps": mb / t_save,
+                "restore_MBps": mb / t_load,
+            })
+    return out
+
+
+def bench_datafeed(batch_sizes=(2, 16, 64)) -> Dict:
+    """Step-fetch latency across the eager/bulk crossover."""
+    out: Dict = {"name": "datafeed", "points": []}
+    with Engine("tcp://127.0.0.1:0") as fe, Engine("tcp://127.0.0.1:0") as tr:
+        for bs in batch_sizes:
+            src = SyntheticSource(vocab=32000, seq_len=1024,
+                                  batch_per_host=bs)
+            DataFeedServer(fe, src)
+            cli = DataFeedClient(tr, [fe.uri], depth=2)
+            cli.get(0)                                   # warm + prefetch
+            t0 = time.perf_counter()
+            for s in range(1, 9):
+                cli.get(s)
+            dt = (time.perf_counter() - t0) / 8
+            nbytes = sum(v.nbytes for v in src.batch_at(0).values())
+            out["points"].append({
+                "batch": bs, "batch_KB": nbytes >> 10,
+                "mode": "eager" if nbytes <= 256 * 1024 else "bulk",
+                "ms_per_step": dt * 1e3,
+                "MBps": nbytes / dt / 1e6})
+    return out
+
+
+def bench_serving(slot_counts=(1, 2, 4)) -> Dict:
+    """Continuous-batching throughput (decode steps amortized over slots)."""
+    cfg = configs.reduced("qwen1.5-0.5b")
+    model = Model(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    out: Dict = {"name": "serving", "points": []}
+    rng = np.random.default_rng(0)
+    for slots in slot_counts:
+        eng = ServeEngine(model, params, max_len=96, n_slots=slots)
+        prompts = [rng.integers(1, cfg.vocab, size=6) for _ in range(8)]
+        eng.generate(prompts[:1], max_new=2)             # compile warm-up
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new=16)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o) for o in outs)
+        out["points"].append({"slots": slots, "tok_s": toks / dt})
+    return out
+
+
+def run_all(verbose=True):
+    results = [bench_checkpoint(), bench_datafeed(), bench_serving()]
+    if verbose:
+        print("[checkpoint] MB -> save MB/s, restore MB/s")
+        for p in results[0]["points"]:
+            print(f"   {p['MB']:4d} -> {p['save_MBps']:7.0f}, "
+                  f"{p['restore_MBps']:7.0f}")
+        print("[datafeed] batch -> KB, mode, ms/step")
+        for p in results[1]["points"]:
+            print(f"   {p['batch']:3d} -> {p['batch_KB']:7d}KB {p['mode']:5s}"
+                  f" {p['ms_per_step']:7.1f}ms {p['MBps']:6.0f}MB/s")
+        print("[serving] slots -> tok/s")
+        for p in results[2]["points"]:
+            print(f"   {p['slots']:2d} -> {p['tok_s']:6.1f}")
+    return results

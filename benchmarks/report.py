@@ -1,0 +1,69 @@
+"""EXPERIMENTS.md table generator: §Dry-run and §Roofline fragments from
+experiments/dryrun/*.json, plus variant (hillclimb) comparisons.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import roofline
+
+DRYRUN = Path("experiments/dryrun")
+GB = 1 << 30
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*_{mesh}.json")):
+        if "__" in f.name:
+            continue
+        r = json.loads(f.read_text())
+        mem = r.get("memory", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {'✓' if r['ok'] else '✗'} | "
+            f"{r.get('compile_s', '—')} | "
+            f"{mem.get('argument_size_in_bytes', 0) / GB:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0) / GB:.2f} | "
+            f"{r.get('state_bytes_analytic', 0) / GB:.2f} |")
+    hdr = ("| arch | shape | compiled | s | args GB/dev | temp GB/dev | "
+           "state GB/dev (analytic) |\n|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def variant_table() -> str:
+    out = []
+    for f in sorted(DRYRUN.glob("*__*.json")):
+        v = json.loads(f.read_text())
+        base_name = f.name.split("__")[0] + ".json"
+        b = json.loads((DRYRUN / base_name).read_text())
+        fb, fv = b.get("cost_fit"), v.get("cost_fit")
+        if not (fb and fv):
+            continue
+        out.append(
+            f"| {v['arch']} {v['shape']} | {v.get('variant')} | "
+            f"{fb['flops']:.3g}→{fv['flops']:.3g} | "
+            f"{fb['bytes']:.3g}→{fv['bytes']:.3g} | "
+            f"{fb['coll_wire']:.3g}→{fv['coll_wire']:.3g} | "
+            f"{b['memory']['temp_size_in_bytes'] / GB:.1f}→"
+            f"{v['memory']['temp_size_in_bytes'] / GB:.1f} |")
+    hdr = ("| cell | variant | flops/dev | bytes/dev | coll wire/dev | "
+           "temp GB/dev |\n|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(out)
+
+
+def main():
+    print("## Dry-run (single-pod 16×16 = 256 chips)\n")
+    print(dryrun_table("single"))
+    print("\n## Dry-run (multi-pod 2×16×16 = 512 chips)\n")
+    print(dryrun_table("multi"))
+    print("\n## Roofline (single-pod)\n")
+    rows = roofline.load_all("single")
+    print(roofline.table(rows))
+    print("\n## Variants (hillclimb measurements)\n")
+    print(variant_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs the Mercury microbenchmarks (latency / bandwidth / rate — one per
+CLUSTER'13 evaluation axis), the service-level benchmarks (checkpoint,
+datafeed, serving), and prints the roofline table if dry-run records
+exist.  Results land in experiments/bench/.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from . import bench_core, bench_services
+
+OUT = Path("experiments/bench")
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    all_results = []
+
+    print("=" * 72)
+    print("Mercury microbenchmarks (paper evaluation axes)")
+    print("=" * 72)
+    all_results += bench_core.run_all()
+
+    print("=" * 72)
+    print("Service benchmarks (built on the RPC+bulk substrate)")
+    print("=" * 72)
+    all_results += bench_services.run_all()
+
+    for r in all_results:
+        (OUT / f"{r['name']}.json").write_text(json.dumps(r, indent=1))
+
+    # roofline table (needs dry-run records)
+    try:
+        from . import roofline
+        rows = roofline.load_all("single")
+        if rows:
+            print("=" * 72)
+            print(f"Roofline (single-pod, {len(rows)} cells) — "
+                  "full table in EXPERIMENTS.md")
+            print("=" * 72)
+            print(roofline.table(rows))
+    except Exception as e:                                # pragma: no cover
+        print(f"(roofline table skipped: {e})")
+    print("benchmarks complete; json in", OUT)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Elasticity + straggler mitigation demo:
+
+  * three worker engines join the membership service; one stops
+    heartbeating ("fails"); the survivors observe the epoch bump and
+    rebuild their world view (elastic scaling signal);
+  * two datafeed replicas serve batches; one is artificially slow —
+    ``replicated_call`` issues to both and takes the first responder,
+    so the straggler never stalls the step.
+
+    PYTHONPATH=src python examples/elastic_straggler.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.executor import Engine
+from repro.data.pipeline import SyntheticSource
+from repro.services import (DataFeedServer, MembershipClient,
+                            MembershipServer, replicated_call)
+
+
+def main():
+    # ---- membership / elasticity ---------------------------------------
+    coord = Engine("tcp://127.0.0.1:0")
+    MembershipServer(coord, heartbeat_timeout=0.6, sweep_interval=0.15)
+    workers = [Engine("tcp://127.0.0.1:0") for _ in range(3)]
+    clients = []
+    for i, w in enumerate(workers):
+        c = MembershipClient(
+            w, coord.uri, f"worker-{i}", 0.15,
+            on_change=lambda v, i=i: print(
+                f"  [worker-{i}] epoch {v['epoch']}: members {v['members']}"))
+        c.join({"slot": i})
+        clients.append(c)
+    time.sleep(0.5)
+    print("[elastic] initial view:", clients[0].current_view()["members"])
+
+    print("[elastic] worker-2 fails (heartbeat stops)…")
+    clients[2]._stop.set()
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        if clients[0].current_view()["members"] == ["worker-0", "worker-1"]:
+            break
+        time.sleep(0.1)
+    view = clients[0].current_view()
+    print(f"[elastic] survivors rebuild with {view['members']} "
+          f"(epoch {view['epoch']}) — driver would re-mesh + restore here")
+
+    # ---- straggler mitigation -------------------------------------------
+    src = SyntheticSource(vocab=1000, seq_len=256, batch_per_host=4)
+    fast = Engine("tcp://127.0.0.1:0")
+    slow = Engine("tcp://127.0.0.1:0")
+    DataFeedServer(fast, src)
+
+    class SlowSource:
+        def batch_at(self, step):
+            time.sleep(2.0)                  # persistent straggler
+            return src.batch_at(step)
+
+    DataFeedServer(slow, SlowSource())
+    trainer = Engine("tcp://127.0.0.1:0")
+
+    t0 = time.time()
+    for s in range(3):
+        rsp = replicated_call(trainer, [slow.uri, fast.uri], "feed.get",
+                              {"step": s}, timeout=30.0)
+        assert rsp["mode"] in ("eager", "bulk")
+        print(f"[straggler] step {s} served in "
+              f"{time.time() - t0:.2f}s cumulative (first-wins)")
+    assert time.time() - t0 < 4.0, "straggler must not gate the steps"
+
+    for e in [coord, fast, slow, trainer] + workers:
+        e.shutdown()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .base import (NAAddress, NACallback, NAMemHandle, NAOp, NAPlugin,
+                   UNEXPECTED_MSG_LIMIT)
+from .registry import initialize, register_plugin
+from .self_plugin import SelfPlugin
+from .tcp import TCPPlugin
+
+__all__ = [
+    "NAAddress", "NACallback", "NAMemHandle", "NAOp", "NAPlugin",
+    "UNEXPECTED_MSG_LIMIT", "initialize", "register_plugin",
+    "SelfPlugin", "TCPPlugin",
+]

@@ -1,0 +1,37 @@
+"""Plugin registry — ``na_initialize("tcp://...")`` equivalent."""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..types import MercuryError, Ret
+from .base import NAPlugin
+from .self_plugin import SelfPlugin
+from .tcp import TCPPlugin
+
+_PLUGINS = {
+    "self": SelfPlugin,
+    "tcp": TCPPlugin,
+}
+
+
+def register_plugin(scheme: str, cls) -> None:
+    _PLUGINS[scheme] = cls
+
+
+def initialize(uri: Optional[str] = None, listen: bool = True) -> NAPlugin:
+    """Create a plugin instance from a URI scheme.
+
+    ``initialize("self://svc1")``, ``initialize("tcp://127.0.0.1:0")``,
+    ``initialize("tcp")`` (ephemeral port), ``initialize()`` (self, anon).
+    """
+    if uri is None:
+        return SelfPlugin()
+    scheme = uri.split("://", 1)[0] if "://" in uri else uri
+    cls = _PLUGINS.get(scheme)
+    if cls is None:
+        raise MercuryError(Ret.INVALID_ARG, f"unknown NA plugin: {scheme}")
+    if "://" not in uri:
+        uri = None
+    if cls is TCPPlugin:
+        return cls(uri, listen=listen)
+    return cls(uri)

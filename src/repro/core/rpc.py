@@ -1,0 +1,315 @@
+"""RPC core (paper contribution C2) — Mercury hg_core equivalent.
+
+An RPC operation is deliberately *lightweight*: a buffer transmitted to a
+target where a registered function callback is executed. Dispatch is by a
+stable 64-bit id derived from the RPC name (both sides register the same
+name). Origin and target are symmetric (C4): every :class:`HGClass` can
+both forward and serve.
+
+Flow (matches Mercury):
+  origin:  handle = hg.create(addr, id)
+           handle.forward(input, cb)      # encode → unexpected msg
+                                          # + pre-posted expected recv(cookie)
+  target:  unexpected msg → decode header → look up id
+           → RPC_HANDLER completion entry on the context queue
+           trigger() → handler(handle); handler: handle.get_input(),
+           work (may issue bulk transfers), handle.respond(output)
+  origin:  expected msg(cookie) → FORWARD completion entry → cb(info)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from . import proc as hg_proc
+from .na.base import NAAddress, NAPlugin, UNEXPECTED_MSG_LIMIT
+from .progress import Context
+from .types import (Callback, CallbackInfo, Flags, MercuryError, OpType,
+                    RequestHeader, ResponseHeader, Ret, _Counter,
+                    payload_crc32, stable_rpc_id)
+
+
+@dataclass
+class RPCInfo:
+    name: str
+    rpc_id: int
+    in_proc: hg_proc.Proc
+    out_proc: hg_proc.Proc
+    handler: Optional[Callable[["Handle"], None]]
+    no_response: bool = False
+
+
+class HandleInfo:
+    """hg_info: addressing info attached to a handle."""
+
+    __slots__ = ("addr", "rpc_id", "context")
+
+    def __init__(self, addr: NAAddress, rpc_id: int, context: Context):
+        self.addr = addr
+        self.rpc_id = rpc_id
+        self.context = context
+
+
+class Handle:
+    """An RPC handle — origin side (created via HGClass.create) or target
+    side (materialized by the dispatcher for an incoming request)."""
+
+    def __init__(self, hg: "HGClass", info: HandleInfo, rpc: RPCInfo):
+        self.hg = hg
+        self.info = info
+        self.rpc = rpc
+        self.cookie: int = 0
+        self.ret: Ret = Ret.SUCCESS
+        self.output: Any = None          # origin: decoded response
+        self._input_raw: Optional[memoryview] = None
+        self._input: Any = None
+        self._input_decoded = False
+        self._deadline_entry: Optional[dict] = None
+        self._recv_op = None
+        self._completed = False
+        self._lock = threading.Lock()
+        self.responded = False
+
+    # ------------------------------------------------------------------ origin
+    def forward(self, input_value: Any, cb: Optional[Callback] = None,
+                timeout: Optional[float] = None, arg: Any = None) -> None:
+        """Issue the RPC (non-blocking). ``cb`` fires from trigger() when the
+        response (or failure/timeout) is known."""
+        hg = self.hg
+        ctx = self.info.context
+        self.cookie = hg._cookie_counter.next()
+        payload = hg_proc.encode(self.rpc.in_proc, input_value)
+        flags = Flags.NONE
+        crc = 0
+        if hg.checksum_payloads:
+            flags |= Flags.CHECKSUM
+            crc = payload_crc32(payload)
+        if self.rpc.no_response:
+            flags |= Flags.NO_RESPONSE
+        hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
+                            len(payload), crc)
+        msg = (hdr.pack(), payload)       # vectored: no payload copy
+
+        def complete(ret: Ret, output: Any = None):
+            with self._lock:
+                if self._completed:
+                    return
+                self._completed = True
+            self.ret = ret
+            self.output = output
+            if self._deadline_entry is not None:
+                ctx.disarm(self._deadline_entry)
+            ctx.completion_add(cb, CallbackInfo(OpType.FORWARD, ret,
+                                                handle=self, arg=arg))
+
+        if not self.rpc.no_response:
+            def on_response(ret: Ret, data: memoryview):
+                if ret != Ret.SUCCESS:
+                    complete(ret)
+                    return
+                try:
+                    rhdr = ResponseHeader.unpack(data)
+                    body = data[len(ResponseHeader(0).pack()):]
+                    if rhdr.payload_len and Flags.CHECKSUM and hg.checksum_payloads:
+                        if rhdr.payload_crc and payload_crc32(body) != rhdr.payload_crc:
+                            complete(Ret.CHECKSUM_ERROR)
+                            return
+                    if rhdr.ret != Ret.SUCCESS:
+                        out = None
+                        if rhdr.payload_len:
+                            out = hg_proc.decode(hg_proc.proc_str, body)
+                        complete(rhdr.ret, out)
+                        return
+                    out = hg_proc.decode(self.rpc.out_proc, body) \
+                        if rhdr.payload_len else None
+                    complete(Ret.SUCCESS, out)
+                except MercuryError as e:
+                    complete(e.ret)
+                except Exception:
+                    complete(Ret.PROTOCOL_ERROR)
+
+            self._recv_op = hg.na.msg_recv_expected(self.info.addr, self.cookie,
+                                                    on_response)
+            if timeout is not None:
+                def on_timeout():
+                    if self._recv_op is not None:
+                        hg.na.cancel(self._recv_op)
+                    complete(Ret.TIMEOUT)
+                self._deadline_entry = ctx.add_deadline(
+                    time.monotonic() + timeout, on_timeout)
+
+        def on_sent(ret: Ret):
+            if ret != Ret.SUCCESS:
+                if self._recv_op is not None:
+                    hg.na.cancel(self._recv_op)
+                complete(ret)
+            elif self.rpc.no_response:
+                complete(Ret.SUCCESS)
+
+        hg.na.msg_send_unexpected(self.info.addr, msg, self.cookie, on_sent)
+
+    def cancel(self) -> None:
+        if self._recv_op is not None:
+            self.hg.na.cancel(self._recv_op)
+
+        def already(ret, output=None):
+            pass
+        with self._lock:
+            if self._completed:
+                return
+            self._completed = True
+        self.ret = Ret.CANCELED
+        if self._deadline_entry is not None:
+            self.info.context.disarm(self._deadline_entry)
+
+    # ------------------------------------------------------------------ target
+    def get_input(self) -> Any:
+        if not self._input_decoded:
+            self._input = hg_proc.decode(self.rpc.in_proc, self._input_raw)
+            self._input_decoded = True
+        return self._input
+
+    def respond(self, output: Any = None, ret: Ret = Ret.SUCCESS,
+                cb: Optional[Callback] = None) -> None:
+        if self.rpc.no_response:
+            raise MercuryError(Ret.INVALID_ARG, "RPC registered as NO_RESPONSE")
+        if self.responded:
+            raise MercuryError(Ret.INVALID_ARG, "respond() called twice")
+        self.responded = True
+        hg = self.hg
+        if ret == Ret.SUCCESS:
+            payload = hg_proc.encode(self.rpc.out_proc, output) \
+                if output is not None else b""
+        else:
+            payload = hg_proc.encode(hg_proc.proc_str, str(output)) \
+                if output is not None else b""
+        crc = payload_crc32(payload) if hg.checksum_payloads and payload else 0
+        hdr = ResponseHeader(self.cookie, ret, len(payload), crc)
+
+        ctx = self.info.context
+
+        def on_sent(send_ret: Ret):
+            ctx.completion_add(cb, CallbackInfo(OpType.RESPOND, send_ret,
+                                                handle=self))
+
+        hg.na.msg_send_expected(self.info.addr, (hdr.pack(), payload),
+                                self.cookie, on_sent)
+
+
+class HGClass:
+    """Top-level RPC class: owns the NA plugin, the registration table and
+    the default execution context (more can be created)."""
+
+    def __init__(self, na: NAPlugin, checksum_payloads: bool = True,
+                 unexpected_prepost: int = 8):
+        self.na = na
+        self.checksum_payloads = checksum_payloads
+        self.registered: Dict[int, RPCInfo] = {}
+        self._by_name: Dict[str, RPCInfo] = {}
+        self._cookie_counter = _Counter()
+        self.context = Context(na)
+        self._unexpected_prepost = unexpected_prepost
+        self._listening = False
+
+    # -- registration -----------------------------------------------------------
+    def register(self, name: str,
+                 in_proc: hg_proc.Proc = hg_proc.proc_any,
+                 out_proc: hg_proc.Proc = hg_proc.proc_any,
+                 handler: Optional[Callable[[Handle], None]] = None,
+                 no_response: bool = False) -> int:
+        rpc_id = stable_rpc_id(name)
+        info = RPCInfo(name, rpc_id, in_proc, out_proc, handler, no_response)
+        existing = self.registered.get(rpc_id)
+        if existing is not None and existing.name != name:
+            raise MercuryError(Ret.INVALID_ARG,
+                               f"rpc id collision: {name} vs {existing.name}")
+        self.registered[rpc_id] = info
+        self._by_name[name] = info
+        return rpc_id
+
+    def is_registered(self, name: str) -> bool:
+        return name in self._by_name
+
+    def lookup(self, uri: str) -> NAAddress:
+        return self.na.addr_lookup(uri)
+
+    def addr_self(self) -> NAAddress:
+        return self.na.addr_self()
+
+    # -- origin side --------------------------------------------------------------
+    def create(self, addr: NAAddress, name: str) -> Handle:
+        info = self._by_name.get(name)
+        if info is None:
+            raise MercuryError(Ret.NOENTRY, f"rpc not registered: {name}")
+        return Handle(self, HandleInfo(addr, info.rpc_id, self.context), info)
+
+    # -- target side ----------------------------------------------------------------
+    def listen(self) -> None:
+        """Arm the dispatcher: pre-post unexpected receives (re-posted on
+        each arrival so there are always ``unexpected_prepost`` armed)."""
+        if self._listening:
+            return
+        self._listening = True
+        for _ in range(self._unexpected_prepost):
+            self._post_unexpected()
+
+    def _post_unexpected(self) -> None:
+        self.na.msg_recv_unexpected(self._on_unexpected)
+
+    def _on_unexpected(self, ret: Ret, source: NAAddress, tag: int,
+                       data: memoryview) -> None:
+        # keep the pipeline of posted receives full
+        if self._listening:
+            self._post_unexpected()
+        if ret != Ret.SUCCESS:
+            return
+        try:
+            hdr = RequestHeader.unpack(data)
+        except MercuryError:
+            return
+        body = data[RequestHeader(0, 0).pack().__len__():]
+        info = self.registered.get(hdr.rpc_id)
+
+        # Build the target-side handle (even for errors, to respond NOENTRY)
+        if info is None:
+            if not (hdr.flags & Flags.NO_RESPONSE):
+                rhdr = ResponseHeader(hdr.cookie, Ret.NOENTRY, 0, 0)
+                self.na.msg_send_expected(source, rhdr.pack(), hdr.cookie,
+                                          lambda r: None)
+            return
+
+        handle = Handle(self, HandleInfo(source, hdr.rpc_id, self.context), info)
+        handle.cookie = hdr.cookie
+        handle._input_raw = body
+
+        if (hdr.flags & Flags.CHECKSUM) and self.checksum_payloads and hdr.payload_len:
+            if payload_crc32(body) != hdr.payload_crc:
+                if not (hdr.flags & Flags.NO_RESPONSE):
+                    handle.respond(None, ret=Ret.CHECKSUM_ERROR)
+                return
+
+        if info.handler is None:
+            if not (hdr.flags & Flags.NO_RESPONSE):
+                handle.respond(None, ret=Ret.NOENTRY)
+            return
+
+        # Paper C5: the handler callback is *placed onto the completion
+        # queue* before being executed (by trigger()).
+        def run(_info: CallbackInfo):
+            try:
+                info.handler(handle)
+            except MercuryError as e:
+                if not info.no_response and not handle.responded:
+                    handle.respond(str(e), ret=e.ret)
+            except Exception as e:  # handler fault → FAULT response
+                if not info.no_response and not handle.responded:
+                    handle.respond(f"{type(e).__name__}: {e}", ret=Ret.FAULT)
+
+        self.context.completion_add(
+            run, CallbackInfo(OpType.RPC_HANDLER, Ret.SUCCESS, handle=handle))
+
+    def finalize(self) -> None:
+        self._listening = False
+        self.na.finalize()

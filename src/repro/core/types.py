@@ -1,0 +1,175 @@
+"""Core types shared across the Mercury-style RPC stack.
+
+Mirrors the public surface of Mercury (hg_core): return codes, operation
+types, headers.  Headers are fixed-size packed structs so that decoding an
+incoming unexpected message is O(1) and allocation-free.
+"""
+from __future__ import annotations
+
+import enum
+import struct
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+PROTOCOL_VERSION = 3
+HEADER_MAGIC = 0x4D4A5250  # "MJRP"
+
+
+class Ret(enum.IntEnum):
+    """Return codes (subset of hg_return_t)."""
+
+    SUCCESS = 0
+    TIMEOUT = 1
+    CANCELED = 2
+    NOENTRY = 3          # RPC id not registered on target
+    PROTOCOL_ERROR = 4
+    CHECKSUM_ERROR = 5
+    NOMEM = 6
+    INVALID_ARG = 7
+    FAULT = 8            # remote handler raised
+    DISCONNECT = 9
+    AGAIN = 10
+    PERMISSION = 11
+
+
+class OpType(enum.IntEnum):
+    """Completion-entry operation types (hg_cb_type)."""
+
+    FORWARD = 0      # origin: response arrived (or send-only completed)
+    RESPOND = 1      # target: response send completed
+    BULK = 2         # bulk transfer completed
+    LOOKUP = 3
+    RPC_HANDLER = 4  # target: incoming RPC ready to execute
+    SEND = 5
+    RECV = 6
+
+
+class MercuryError(Exception):
+    def __init__(self, ret: Ret, msg: str = ""):
+        self.ret = Ret(ret)
+        super().__init__(f"{self.ret.name}: {msg}" if msg else self.ret.name)
+
+
+class ChecksumError(MercuryError):
+    def __init__(self, msg: str = ""):
+        super().__init__(Ret.CHECKSUM_ERROR, msg)
+
+
+# --------------------------------------------------------------------------
+# Wire headers
+# --------------------------------------------------------------------------
+# Request: magic u32 | version u8 | flags u8 | pad u16 | rpc_id u64
+#          | cookie u64 | payload_len u32 | payload_crc u32
+_REQ = struct.Struct("<IBBHQQII")
+# Response: magic u32 | version u8 | ret u8 | pad u16 | cookie u64
+#           | payload_len u32 | payload_crc u32
+_RSP = struct.Struct("<IBBHQII")
+
+REQUEST_HEADER_SIZE = _REQ.size
+RESPONSE_HEADER_SIZE = _RSP.size
+
+
+class Flags(enum.IntFlag):
+    NONE = 0
+    NO_RESPONSE = 1      # fire-and-forget RPC
+    CHECKSUM = 2         # payload CRC is present/verified
+    MORE = 4             # reserved: multi-part payload
+
+
+@dataclass(frozen=True)
+class RequestHeader:
+    rpc_id: int
+    cookie: int
+    flags: Flags = Flags.NONE
+    payload_len: int = 0
+    payload_crc: int = 0
+
+    def pack(self) -> bytes:
+        return _REQ.pack(
+            HEADER_MAGIC, PROTOCOL_VERSION, int(self.flags), 0,
+            self.rpc_id, self.cookie, self.payload_len, self.payload_crc,
+        )
+
+    @staticmethod
+    def unpack(buf: bytes | memoryview) -> "RequestHeader":
+        magic, ver, flags, _pad, rpc_id, cookie, plen, crc = _REQ.unpack_from(buf)
+        if magic != HEADER_MAGIC:
+            raise MercuryError(Ret.PROTOCOL_ERROR, f"bad magic {magic:#x}")
+        if ver != PROTOCOL_VERSION:
+            raise MercuryError(Ret.PROTOCOL_ERROR, f"version {ver} != {PROTOCOL_VERSION}")
+        return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc)
+
+
+@dataclass(frozen=True)
+class ResponseHeader:
+    cookie: int
+    ret: Ret = Ret.SUCCESS
+    payload_len: int = 0
+    payload_crc: int = 0
+
+    def pack(self) -> bytes:
+        return _RSP.pack(
+            HEADER_MAGIC, PROTOCOL_VERSION, int(self.ret), 0,
+            self.cookie, self.payload_len, self.payload_crc,
+        )
+
+    @staticmethod
+    def unpack(buf: bytes | memoryview) -> "ResponseHeader":
+        magic, ver, ret, _pad, cookie, plen, crc = _RSP.unpack_from(buf)
+        if magic != HEADER_MAGIC:
+            raise MercuryError(Ret.PROTOCOL_ERROR, f"bad magic {magic:#x}")
+        if ver != PROTOCOL_VERSION:
+            raise MercuryError(Ret.PROTOCOL_ERROR, f"version {ver} != {PROTOCOL_VERSION}")
+        return ResponseHeader(cookie, Ret(ret), plen, crc)
+
+
+def payload_crc32(data: bytes | memoryview) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+# --------------------------------------------------------------------------
+# Completion entries
+# --------------------------------------------------------------------------
+@dataclass
+class CallbackInfo:
+    """Passed to user callbacks when a completion entry is triggered
+    (hg_cb_info)."""
+
+    op_type: OpType
+    ret: Ret
+    # op-specific payloads:
+    handle: Any = None        # Handle for FORWARD / RPC_HANDLER / RESPOND
+    bulk_op: Any = None       # BulkOp for BULK
+    arg: Any = None           # user arg given at post time
+
+
+Callback = Callable[[CallbackInfo], None]
+
+
+class _Counter:
+    """Monotonic thread-safe u64 counter (cookies, op ids, mem keys)."""
+
+    def __init__(self, start: int = 1):
+        self._v = start
+        self._lock = threading.Lock()
+
+    def next(self) -> int:
+        with self._lock:
+            v = self._v
+            self._v = (self._v + 1) & 0xFFFFFFFFFFFFFFFF
+            return v
+
+
+def stable_rpc_id(name: str) -> int:
+    """Stable 64-bit id for an RPC name (Mercury hashes the func name).
+
+    CRC64-ish via two CRC32 passes; stable across processes/runs which is
+    what matters for origin/target agreement.
+    """
+    b = name.encode()
+    hi = zlib.crc32(b)
+    lo = zlib.crc32(b[::-1] + b"\x9e")
+    v = ((hi << 32) | lo) & 0xFFFFFFFFFFFFFFFF
+    return v or 1

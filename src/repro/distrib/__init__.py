@@ -1,0 +1,5 @@
+from .sharding import (DEFAULT_RULES, bytes_per_device, merge_rules,
+                       spec_for, tree_shardings, tree_specs)
+
+__all__ = ["DEFAULT_RULES", "spec_for", "tree_specs", "tree_shardings",
+           "bytes_per_device", "merge_rules"]

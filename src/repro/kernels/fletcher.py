@@ -1,0 +1,130 @@
+"""Fletcher-64 checksum Pallas kernel — the RPC layer's own hot loop
+(bulk-transfer / checkpoint-shard integrity).
+
+Math: Fletcher-64 over uint32 words, both running sums mod M = 2³²−1.
+The kernel exploits 2³² ≡ 1 (mod M): a 64-bit quantity hi·2³²+lo reduces
+to hi+lo, so every product/sum can be kept in uint32 with end-around-
+carry adds — no 64-bit integers needed, which is exactly the adaptation
+a TPU (32-bit VPU lanes) requires.
+
+Block combine: a block of length L with partial sums (s1_b, s2_b)
+composes as  s2 = s2_a + s2_b + s1_a·L ;  s1 = s1_a + s1_b  (mod M).
+Within a block, s2_b = Σ (L−i)·w_i via per-lane mulmod with small
+coefficients, then a lane-sum that splits each word into 16-bit halves
+(so a 256-element sum cannot overflow 32 bits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MOD = (1 << 32) - 1
+GROUP = 256          # words per inner group (coef ≤ 256 ⇒ products fit)
+
+
+def _addmod(a, b):
+    """(a + b) mod (2³²−1) with end-around carry, uint32 in/out."""
+    s = a + b
+    carry = (s < a).astype(jnp.uint32)      # wrapped past 2³²  (≡ +1 mod M)
+    s = s + carry
+    # the +1 itself cannot re-wrap unless s was 2³²−1; fold once more
+    carry2 = (s < carry).astype(jnp.uint32)
+    return s + carry2
+
+
+def _mulmod_small(c, w):
+    """(c·w) mod (2³²−1) for c ≤ 2¹⁶. Split w = wh·2¹⁶ + wl;
+    c·wh·2¹⁶ mod M = ((c·wh) >> 16) + ((c·wh & 0xFFFF) << 16)."""
+    c = c.astype(jnp.uint32)
+    w = w.astype(jnp.uint32)
+    wh = w >> 16
+    wl = w & jnp.uint32(0xFFFF)
+    cwh = c * wh                               # ≤ 2³²−2¹⁶, fits
+    cwl = c * wl
+    part = _addmod(cwh >> 16, (cwh & jnp.uint32(0xFFFF)) << 16)
+    return _addmod(part, cwl)
+
+
+def _summod(v):
+    """Sum a (…, GROUP) uint32 vector mod M without overflow: sum 16-bit
+    halves in uint32 (≤ 2²⁴ each), recombine with the 2³²≡1 trick."""
+    hi = jnp.sum(v >> 16, dtype=jnp.uint32)                # ≤ GROUP·2¹⁶
+    lo = jnp.sum(v & jnp.uint32(0xFFFF), dtype=jnp.uint32)
+    hi_fold = _addmod(hi >> 16, (hi & jnp.uint32(0xFFFF)) << 16)
+    return _addmod(hi_fold, lo)
+
+
+def _kernel(x_ref, out_ref, acc_ref, *, tile, nt):
+    it = pl.program_id(0)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_ref[0] = jnp.uint32(0)   # s1
+        acc_ref[1] = jnp.uint32(0)   # s2
+
+    w = x_ref[...].reshape(tile // GROUP, GROUP)
+    # per-group partial sums
+    coef = (GROUP - jax.lax.broadcasted_iota(jnp.int32, w.shape, 1)) \
+        .astype(jnp.uint32)                               # L..1 per group
+    s1_g = jnp.stack([_summod(w[g]) for g in range(tile // GROUP)])
+    s2_g = jnp.stack([_summod(_mulmod_small(coef[g], w[g]))
+                      for g in range(tile // GROUP)])
+    # fold groups left→right: s2 = s2 ∘ group (group length = GROUP)
+    s1 = jnp.uint32(0)
+    s2 = jnp.uint32(0)
+    for g in range(tile // GROUP):
+        s2 = _addmod(_addmod(s2, s2_g[g]),
+                     _mulmod_small(jnp.uint32(GROUP), s1))
+        s1 = _addmod(s1, s1_g[g])
+    # fold into running accumulator (previous length = it·tile; but the
+    # combine only needs the *current block's* length for the s1 term)
+    acc_s1, acc_s2 = acc_ref[0], acc_ref[1]
+    acc_ref[1] = _addmod(_addmod(acc_s2, s2),
+                         _mulmod_small(jnp.uint32(tile % 65536), acc_s1)
+                         if tile <= 65535 else
+                         _mulmod_small(jnp.uint32(65535),
+                                       _mulmod_small(
+                                           jnp.uint32(tile // 65535), acc_s1)))
+    acc_ref[0] = _addmod(acc_s1, s1)
+
+    @pl.when(it == nt - 1)
+    def _fin():
+        out_ref[0] = acc_ref[0]
+        out_ref[1] = acc_ref[1]
+
+
+def fletcher64_pallas(words, *, interpret: bool = False,
+                      tile: int = 2048) -> int:
+    """words: uint32/uint64 numpy array → int checksum (s2 << 32 | s1)."""
+    w = jnp.asarray(np.asarray(words, dtype=np.uint64).astype(np.uint32))
+    n = w.size
+    pad = (-n) % tile
+    if pad:
+        w = jnp.pad(w, ((0, pad),))    # zero words: s1 unchanged, s2 gains
+        # trailing zeros only shift s2 by s1·pad — correct that after.
+    nt = max(w.size // tile, 1)
+
+    kernel = functools.partial(_kernel, tile=tile, nt=nt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((tile,), lambda t: (t,))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.uint32)],
+        interpret=interpret,
+    )(w)
+    s1 = int(out[0])
+    s2 = int(out[1])
+    if pad:
+        # remove the contribution of `pad` trailing zero words to s2
+        s2 = (s2 - (s1 * pad) % MOD) % MOD
+    # map the 0 ≡ M ambiguity of end-around-carry arithmetic
+    s1 %= MOD
+    s2 %= MOD
+    return (s2 << 32) | s1

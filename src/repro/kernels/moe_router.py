@@ -1,0 +1,71 @@
+"""Fused MoE router Pallas kernel: softmax + iterative top-k + renorm.
+
+Grid over token blocks; the whole expert dimension (E ≤ a few hundred)
+sits in VMEM lanes.  Top-k is k rounds of (max, argmax-by-iota, mask) —
+k is small (≤ 8) so this is k vector passes, no sort.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(logits_ref, w_ref, idx_ref, probs_ref, *, k, renormalize):
+    logits = logits_ref[...].astype(jnp.float32)        # (Tb, E)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=1, keepdims=True)
+    probs_ref[...] = probs
+
+    Tb, E = probs.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (Tb, E), 1)
+    work = probs
+    wsum = jnp.zeros((Tb, 1), jnp.float32)
+    for j in range(k):
+        mj = jnp.max(work, axis=1, keepdims=True)       # (Tb,1)
+        hit = work == mj
+        ij = jnp.min(jnp.where(hit, iota, E), axis=1, keepdims=True)
+        w_ref[:, j] = mj[:, 0]
+        idx_ref[:, j] = ij[:, 0].astype(jnp.int32)
+        wsum = wsum + mj
+        work = jnp.where(iota == ij, NEG_INF, work)
+    if renormalize:
+        w_ref[...] = w_ref[...] / jnp.maximum(wsum, 1e-9)
+
+
+def router_topk_pallas(logits, k: int, *, renormalize: bool = True,
+                       interpret: bool = False, block_t: int = 256
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    T, E = logits.shape
+    tb = min(block_t, T)
+    pad = (-T) % tb
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+    Tp = T + pad
+    nt = Tp // tb
+
+    kernel = functools.partial(_kernel, k=k, renormalize=renormalize)
+    w, idx, probs = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((tb, E), lambda t: (t, 0))],
+        out_specs=[
+            pl.BlockSpec((tb, k), lambda t: (t, 0)),
+            pl.BlockSpec((tb, k), lambda t: (t, 0)),
+            pl.BlockSpec((tb, E), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Tp, k), jnp.int32),
+            jax.ShapeDtypeStruct((Tp, E), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)
+    return w[:T], idx[:T], probs[:T]

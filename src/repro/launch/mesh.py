@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``--xla_force_host_platform_device_count`` before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Assignment mesh: single pod (16,16)=(data,model); two pods
+    (2,16,16)=(pod,data,model) — 512 chips of TPU v5e."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever this host has (tests / reduced runs)."""
+    n = len(jax.devices())
+    data = max(n // model_axis, 1)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present on a mesh, in (pod, data) order."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# TPU v5e hardware constants (roofline denominators)
+HW = {
+    "peak_flops_bf16": 197e12,      # per chip
+    "hbm_bw": 819e9,                # bytes/s per chip
+    "ici_link_bw": 50e9,            # bytes/s per link (~)
+    "ici_links_per_ring": 2,        # bidirectional ring over one torus axis
+    "hbm_bytes": 16 * 2 ** 30,      # 16 GB per chip
+}

@@ -1,0 +1,78 @@
+"""Serving driver: model server behind the Mercury gateway + demo client.
+
+Starts a ServeEngine for the chosen arch (reduced config by default),
+exposes it through the ServingGateway over the tcp NA plugin, and — in
+--demo mode — runs a client engine that submits a few batched prompts and
+prints the completions.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --demo
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+      --listen tcp://0.0.0.0:7777        # stay up as a server
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.executor import Engine
+from repro.models import Model, unzip
+from repro.serve.engine import ServeEngine
+from repro.services import ServingGateway
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--listen", default="tcp://127.0.0.1:0")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--demo", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    model = Model(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    serve = ServeEngine(model, params, max_len=args.max_len,
+                        n_slots=args.slots)
+
+    server = Engine(args.listen)
+    gw = ServingGateway(server, serve)
+    print(f"serving {cfg.name} at {server.uri} "
+          f"({args.slots} slots, max_len {args.max_len})")
+
+    if args.demo:
+        rng = np.random.default_rng(0)
+        with Engine("tcp://127.0.0.1:0") as client:
+            t0 = time.time()
+            rids = []
+            for i in range(6):
+                prompt = rng.integers(1, cfg.vocab, size=5 + i).tolist()
+                rids.append(client.call(server.uri, "gen.submit",
+                                        {"tokens": prompt, "max_new": 12,
+                                         "temperature": 0.7}))
+            for r in rids:
+                out = client.call(server.uri, "gen.result",
+                                  {"rid": r["rid"], "wait": True},
+                                  timeout=120.0)
+                print(f"rid {r['rid']}: {out['tokens']}")
+            print("stats:", client.call(server.uri, "gen.stats", {}),
+                  f"({time.time() - t0:.1f}s)")
+        gw.stop()
+        server.shutdown()
+    else:
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            gw.stop()
+            server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

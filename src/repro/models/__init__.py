@@ -1,0 +1,4 @@
+from .common import P, unzip, zip_axes, stack_p
+from .transformer import Model
+
+__all__ = ["Model", "P", "unzip", "zip_axes", "stack_p"]

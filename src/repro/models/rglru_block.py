@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma), TPU-adapted.
+
+Structure: gate branch (linear + GeLU) ⊗ recurrent branch (linear →
+causal conv → RG-LRU), merged and projected out.  The recurrence gates
+(r, i) are per-channel affine functions of the conv output — a
+documented simplification of Griffin's block-diagonal gate projections
+that keeps the recurrence embarrassingly channel-parallel (the property
+the Pallas kernel exploits).
+
+Decode state: LRU hidden (B,W) f32 + conv tail (B,cw-1,W) — O(1) in
+sequence length, which is why recurrentgemma runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import P, dense_p, ones_p, zeros_p
+from .ssd_block import _causal_conv, _conv_step
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_params(cfg: ModelConfig, rng, path) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, w = cfg.d_model, _width(cfg)
+    cw = cfg.rglru.conv_width
+    return {
+        "w_gate": dense_p(rng, path + ("w_gate",), (d, w), ("embed", "lru"), dt),
+        "w_x": dense_p(rng, path + ("w_x",), (d, w), ("embed", "lru"), dt),
+        "conv_w": dense_p(rng, path + ("conv_w",), (cw, w), ("conv", "lru"),
+                          dt, in_dim=cw),
+        "conv_b": zeros_p((w,), ("lru",), dt),
+        "a_gate_w": ones_p((w,), ("lru",), dt),
+        "a_gate_b": zeros_p((w,), ("lru",), dt),
+        "i_gate_w": ones_p((w,), ("lru",), dt),
+        "i_gate_b": zeros_p((w,), ("lru",), dt),
+        # Λ init so that a = exp(-c·softplus(Λ)·σ(r)) spans (0.9, 0.999)
+        "log_lambda": P(jnp.linspace(-4.3, -1.5, w).astype(dt), ("lru",)),
+        "w_out": dense_p(rng, path + ("w_out",), (w, d), ("lru", "embed"), dt),
+    }
+
+
+def _branches(cfg, p, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    gate = jax.nn.gelu(xc @ p["w_gate"].astype(cdt), approximate=True)
+    u = xc @ p["w_x"].astype(cdt)
+    return gate, u
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r_pre = uf * p["a_gate_w"].astype(jnp.float32) + p["a_gate_b"].astype(jnp.float32)
+    i_pre = uf * p["i_gate_w"].astype(jnp.float32) + p["i_gate_b"].astype(jnp.float32)
+    return r_pre, i_pre
+
+
+def rglru_block_apply(cfg: ModelConfig, p: dict, x, *, impl: str = "auto",
+                      want_cache: bool = False
+                      ) -> Tuple[jax.Array, Optional[dict]]:
+    """Train / prefill. x: (B,S,d)."""
+    B, S, d = x.shape
+    cw = cfg.rglru.conv_width
+    gate, u = _branches(cfg, p, x)
+    conv_in = u
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    r_pre, i_pre = _gates(p, u)
+    h, h_fin = ops.rglru(u, r_pre, i_pre, p["log_lambda"], None, impl=impl)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = (h.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    cache = None
+    if want_cache:
+        cache = {"h": h_fin.astype(jnp.float32),
+                 "conv": conv_in[:, S - (cw - 1):, :].astype(x.dtype)}
+    return out, cache
+
+
+def rglru_block_decode(cfg: ModelConfig, p: dict, x, cache: dict
+                       ) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: (B,1,d)."""
+    gate, u = _branches(cfg, p, x)
+    conv_y, new_tail = _conv_step(u[:, 0], cache["conv"].astype(u.dtype),
+                                  p["conv_w"], p["conv_b"])
+    r_pre, i_pre = _gates(p, conv_y)
+    _, h_new = ops.rglru_decode_step(cache["h"], conv_y, r_pre, i_pre,
+                                     p["log_lambda"])
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = (h_new.astype(cdt)[:, None] * gate) @ p["w_out"].astype(cdt)
+    return out, {"h": h_new.astype(jnp.float32),
+                 "conv": new_tail.astype(cache["conv"].dtype)}
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    w = _width(cfg)
+    cw = cfg.rglru.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), dtype)}

@@ -1,0 +1,145 @@
+"""Mamba2 block (SSD — state-space duality), TPU-adapted.
+
+Projections: x -> [z, xs, B, C, dt]; depthwise causal conv over
+[xs, B, C]; SSD scan (chunked, :mod:`repro.kernels.ops.ssd`); gated
+RMS-norm with z; output projection.
+
+Decode carries two states per layer: the SSD state (B,H,P,N) and the
+conv tail (B, cw-1, channels) — both O(1) in sequence length, which is
+why mamba2 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .common import P, dense_p, ones_p, zeros_p, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.ngroups * s.state_dim
+    return d_in, H, s.head_dim, s.ngroups, s.state_dim, s.conv_width, conv_ch
+
+
+def ssd_params(cfg: ModelConfig, rng, path) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in, H, Pd, G, N, cw, conv_ch = _dims(cfg)
+    p = {
+        "wz": dense_p(rng, path + ("wz",), (d, d_in), ("embed", "inner"), dt),
+        "wx": dense_p(rng, path + ("wx",), (d, d_in), ("embed", "inner"), dt),
+        "wB": dense_p(rng, path + ("wB",), (d, G * N), ("embed", "state_proj"), dt),
+        "wC": dense_p(rng, path + ("wC",), (d, G * N), ("embed", "state_proj"), dt),
+        "wdt": dense_p(rng, path + ("wdt",), (d, H), ("embed", "ssm_heads"), dt),
+        "dt_bias": zeros_p((H,), ("ssm_heads",), dt),
+        "A_log": P(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt), ("ssm_heads",)),
+        "D": ones_p((H,), ("ssm_heads",), dt),
+        "conv_w": dense_p(rng, path + ("conv_w",), (cw, conv_ch),
+                          ("conv", "conv_ch"), dt, in_dim=cw),
+        "conv_b": zeros_p((conv_ch,), ("conv_ch",), dt),
+        "norm": ones_p((d_in,), ("inner",), dt),
+        "wo": dense_p(rng, path + ("wo",), (d_in, d), ("inner", "embed"), dt),
+    }
+    return p
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B,S,C); w: (cw,C); b: (C,)."""
+    cw = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = b[None, None]
+    for i in range(cw):
+        out = out + pad[:, i:i + S] * w[i][None, None]
+    return out
+
+
+def _conv_step(u_t, tail, w, b):
+    """One conv step. u_t: (B,C); tail: (B,cw-1,C). Returns (y_t, new_tail)."""
+    window = jnp.concatenate([tail, u_t[:, None]], axis=1)   # (B,cw,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+def _split_conv_channels(cfg: ModelConfig, conv_out):
+    d_in, H, Pd, G, N, cw, conv_ch = _dims(cfg)
+    xs = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + G * N]
+    Cm = conv_out[..., d_in + G * N:]
+    return xs, Bm, Cm
+
+
+def _project(cfg: ModelConfig, p, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    z = xc @ p["wz"].astype(cdt)
+    u = jnp.concatenate([xc @ p["wx"].astype(cdt),
+                         xc @ p["wB"].astype(cdt),
+                         xc @ p["wC"].astype(cdt)], axis=-1)
+    dt_raw = xc @ p["wdt"].astype(cdt)
+    return z, u, dt_raw
+
+
+def _finish(cfg, p, y_heads, z, shape):
+    B, S = shape
+    d_in = z.shape[-1]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    y = y_heads.reshape(B, S, d_in)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32)).astype(cdt)
+    return y.astype(cdt) @ p["wo"].astype(cdt)
+
+
+def ssd_block_apply(cfg: ModelConfig, p: dict, x, *, impl: str = "auto",
+                    want_cache: bool = False
+                    ) -> Tuple[jax.Array, Optional[dict]]:
+    """Train / prefill. x: (B,S,d). Returns (out, cache or None)."""
+    B, S, d = x.shape
+    d_in, H, Pd, G, N, cw, conv_ch = _dims(cfg)
+    z, u, dt_raw = _project(cfg, p, x)
+    conv_out = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = _split_conv_channels(cfg, conv_out)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_fin = ops.ssd(xs.reshape(B, S, H, Pd), dt, A,
+                       Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+                       p["D"], None, chunk=cfg.ssm.chunk, impl=impl)
+    out = _finish(cfg, p, y, z, (B, S))
+    cache = None
+    if want_cache:
+        cache = {"h": h_fin.astype(jnp.float32),
+                 "conv": u[:, S - (cw - 1):, :].astype(x.dtype)}
+    return out, cache
+
+
+def ssd_block_decode(cfg: ModelConfig, p: dict, x, cache: dict
+                     ) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: (B,1,d)."""
+    B = x.shape[0]
+    d_in, H, Pd, G, N, cw, conv_ch = _dims(cfg)
+    z, u, dt_raw = _project(cfg, p, x)
+    conv_y, new_tail = _conv_step(u[:, 0], cache["conv"].astype(u.dtype),
+                                  p["conv_w"], p["conv_b"])
+    conv_y = jax.nn.silu(conv_y)
+    xs, Bm, Cm = _split_conv_channels(cfg, conv_y)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y_t, h_new = ops.ssd_decode_step(
+        cache["h"], xs.reshape(B, H, Pd), dt, A,
+        Bm.reshape(B, G, N), Cm.reshape(B, G, N), p["D"])
+    out = _finish(cfg, p, y_t[:, None], z, (B, 1))
+    return out, {"h": h_new.astype(jnp.float32),
+                 "conv": new_tail.astype(cache["conv"].dtype)}
+
+
+def ssd_cache_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in, H, Pd, G, N, cw, conv_ch = _dims(cfg)
+    return {"h": jnp.zeros((batch, H, Pd, N), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, conv_ch), dtype)}

@@ -1,0 +1,164 @@
+"""KV-cache serving engine with continuous batching.
+
+A fixed pool of ``n_slots`` sequence slots shares one batched cache
+pytree.  New requests prefill into a free slot (B=1 prefill, scatter at
+the cache's batch dim — located via the cache's logical axes); every
+``step()`` decodes *all* active slots in lockstep with per-slot positions
+(the vector-``pos`` decode path).  Finished slots free immediately and
+the next queued request takes over — classic continuous batching.
+
+The Mercury serving gateway (services/gateway.py) drives this engine from
+RPC handlers; ``generate()`` is the synchronous convenience wrapper used
+by examples and tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model, unzip
+from ..models.common import P, is_p
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new: int = 32
+    temperature: float = 0.0           # 0 = greedy
+    eos_id: int = -1                   # -1 = never
+    frontend: Optional[np.ndarray] = None
+    out_tokens: List[int] = field(default_factory=list)
+    done_event: threading.Event = field(default_factory=threading.Event)
+    on_token: Optional[Callable[[int, int], None]] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_len: int = 512,
+                 n_slots: int = 4, seed: int = 0, impl: str = "auto"):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.impl = impl
+        cache_p = model.cache_specs(n_slots, max_len)
+        self.cache, self.cache_axes = unzip(cache_p)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._rng = jax.random.PRNGKey(seed)
+        self._rid = 0
+        self._lock = threading.Lock()
+
+        self._prefill_jit = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_len=max_len,
+                                            impl=impl))
+        self._decode_jit = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                        impl=impl))
+
+    # ------------------------------------------------------------------ slots
+    def _scatter_slot(self, cache, cache1, slot: int):
+        """Insert a B=1 cache into the engine cache at ``slot`` (batch dim
+        found via logical axes)."""
+        def one(dst, src, axes):
+            b = axes.index("batch")
+            idx = tuple([slice(None)] * b + [slot])
+            return dst.at[idx].set(src.astype(dst.dtype)[
+                tuple([slice(None)] * b + [0])])
+        return jax.tree_util.tree_map(
+            one, cache, cache1, self.cache_axes,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+    def submit(self, prompt, max_new: int = 32, temperature: float = 0.0,
+               eos_id: int = -1, frontend=None,
+               on_token=None) -> Request:
+        with self._lock:
+            self._rid += 1
+            rid = self._rid
+        req = Request(rid, np.asarray(prompt, np.int32), max_new,
+                      temperature, eos_id, frontend, on_token=on_token)
+        self.queue.put(req)
+        return req
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if req.frontend is not None:
+                batch["frontend"] = jnp.asarray(req.frontend[None])
+            logits, cache1 = self._prefill_jit(self.params, batch)
+            self.cache = self._scatter_slot(self.cache, cache1, slot)
+            tok = self._sample(logits[0], req)
+            prompt_span = len(req.prompt) + (
+                self.model.cfg.frontend_seq
+                if req.frontend is not None else 0)
+            self.pos[slot] = prompt_span
+            self.slot_req[slot] = req
+            self.last_tok[slot] = tok
+            self._emit(req, tok)
+
+    def _sample(self, logits, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, logits / req.temperature))
+
+    def _emit(self, req: Request, tok: int):
+        req.out_tokens.append(tok)
+        if req.on_token:
+            req.on_token(req.rid, tok)
+        if tok == req.eos_id or len(req.out_tokens) >= req.max_new:
+            req.done_event.set()
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> int:
+        """One decode step for all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode_jit(self.params, self.cache,
+                                              toks, pos)
+        for i in active:
+            req = self.slot_req[i]
+            if req.done_event.is_set():
+                self.slot_req[i] = None
+                continue
+            tok = self._sample(logits[i], req)
+            self.pos[i] += 1
+            self.last_tok[i] = tok
+            self._emit(req, tok)
+            if req.done_event.is_set():
+                self.slot_req[i] = None
+        return len([r for r in self.slot_req if r is not None])
+
+    def drain(self):
+        """Run steps until queue and slots are empty."""
+        while True:
+            n = self.step()
+            if n == 0 and self.queue.empty():
+                return
+
+    def generate(self, prompts, max_new: int = 32, temperature: float = 0.0,
+                 eos_id: int = -1, frontends=None) -> List[List[int]]:
+        reqs = [self.submit(p, max_new, temperature, eos_id,
+                            None if frontends is None else frontends[i])
+                for i, p in enumerate(prompts)]
+        self.drain()
+        return [r.out_tokens for r in reqs]

@@ -1,0 +1,115 @@
+"""Service substrate: pytree <-> named-buffer codecs shared by the
+checkpoint and datafeed services, plus the replicated-call straggler
+mitigation helper.
+
+Every service node is just a :class:`repro.core.executor.Engine` — origin
+and target at once (paper C4); these helpers keep the services thin.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from ..core.executor import Engine, RemoteError
+from ..core.types import MercuryError, Ret
+from ..kernels import ops as kops
+
+
+def flatten_named(tree) -> Dict[str, np.ndarray]:
+    """Pytree → {path: ndarray} with deterministic, reversible keys."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def unflatten_named(template, named: Dict[str, np.ndarray]):
+    """Rebuild a tree shaped like ``template`` from {path: ndarray}."""
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = jax.tree_util.keystr(path)
+        if key not in named:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = named[key]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {want.shape}")
+        leaves.append(arr.astype(want.dtype, copy=False))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checksum_of(arr: np.ndarray) -> int:
+    """Fletcher-64 over the raw bytes (padded to a u32 boundary)."""
+    raw = np.ascontiguousarray(arr).view(np.uint8).ravel()
+    pad = (-raw.size) % 4
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    return kops.fletcher64(raw.view(np.uint32), impl="xla")
+
+
+def manifest_of(named: Dict[str, np.ndarray]) -> dict:
+    return {
+        "keys": list(named.keys()),
+        "shapes": [list(v.shape) for v in named.values()],
+        "dtypes": [str(v.dtype) for v in named.values()],
+        "nbytes": [int(v.nbytes) for v in named.values()],
+        # hex (Fletcher-64 exceeds the signed-i64 wire int)
+        "checksums": [f"{checksum_of(v):016x}" for v in named.values()],
+    }
+
+
+def alloc_from_manifest(man: dict) -> Dict[str, np.ndarray]:
+    return {k: np.empty(tuple(s), dtype=np.dtype(d))
+            for k, s, d in zip(man["keys"], man["shapes"], man["dtypes"])}
+
+
+def verify_manifest(man: dict, named: Dict[str, np.ndarray]) -> None:
+    for k, want in zip(man["keys"], man["checksums"]):
+        got = f"{checksum_of(named[k]):016x}"
+        if got != want:
+            raise MercuryError(Ret.CHECKSUM_ERROR,
+                               f"shard {k}: {got} != {want}")
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation: replicated issue, first-wins
+# ---------------------------------------------------------------------------
+def replicated_call(engine: Engine, targets: Sequence[str], name: str,
+                    arg: Any = None, timeout: float = 30.0) -> Any:
+    """Issue the same RPC to every target; first success wins, the rest
+    are abandoned (their handles are canceled at transport level when the
+    engine GC's them).  Raises the last error if all fail."""
+    if not targets:
+        raise MercuryError(Ret.INVALID_ARG, "no targets")
+    futs = [engine.call_async(t, name, arg, timeout=timeout)
+            for t in targets]
+    last_err: Optional[Exception] = None
+    done_any = threading.Event()
+    result_box: dict = {}
+
+    def watch(f):
+        nonlocal last_err
+        try:
+            r = f.result()
+            if not done_any.is_set():
+                result_box["v"] = r
+                done_any.set()
+        except Exception as e:
+            last_err = e
+            if all(fu.done() for fu in futs) and not done_any.is_set():
+                done_any.set()
+
+    for f in futs:
+        f.add_done_callback(watch)
+    done_any.wait(timeout + 5.0)
+    if "v" in result_box:
+        return result_box["v"]
+    raise last_err or MercuryError(Ret.TIMEOUT, name)

@@ -1,0 +1,95 @@
+"""Serving gateway: the Mercury RPC front door for the ServeEngine.
+
+RPCs:
+  ``gen.submit``   {tokens, max_new, temperature, eos_id[, frontend]}
+                   → {rid}                      (non-blocking enqueue)
+  ``gen.result``   {rid[, wait]} → {tokens, done}
+  ``gen.generate`` blocking submit+wait (handler parks on the request's
+                   done event — it runs on the engine's handler pool, so
+                   the progress thread keeps spinning: exactly the
+                   multithreaded-executor shim of paper C5)
+  ``gen.stats``    → queue/slot utilization
+
+A background thread drives ``ServeEngine.step()`` whenever work exists —
+continuous batching across concurrently connected clients.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.executor import Engine
+from ..serve.engine import Request, ServeEngine
+
+
+class ServingGateway:
+    def __init__(self, engine: Engine, serve: ServeEngine):
+        self.engine = engine
+        self.serve = serve
+        self.requests: Dict[int, Request] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self.steps = 0
+        engine.register("gen.submit", self._submit)
+        engine.register("gen.result", self._result)
+        engine.register("gen.generate", self._generate)
+        engine.register("gen.stats", self._stats)
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _enqueue(self, req_in) -> Request:
+        fe = req_in.get("frontend")
+        req = self.serve.submit(
+            np.asarray(req_in["tokens"], np.int32),
+            max_new=int(req_in.get("max_new", 32)),
+            temperature=float(req_in.get("temperature", 0.0)),
+            eos_id=int(req_in.get("eos_id", -1)),
+            frontend=None if fe is None else np.asarray(fe, np.float32))
+        with self._lock:
+            self.requests[req.rid] = req
+        return req
+
+    def _submit(self, req_in):
+        return {"rid": self._enqueue(req_in).rid}
+
+    def _result(self, req_in):
+        rid = int(req_in["rid"])
+        with self._lock:
+            req = self.requests.get(rid)
+        if req is None:
+            return {"error": "unknown rid"}
+        if req_in.get("wait"):
+            req.done_event.wait(float(req_in.get("timeout", 60.0)))
+        done = req.done_event.is_set()
+        out = {"tokens": list(req.out_tokens), "done": done}
+        if done:
+            with self._lock:
+                self.requests.pop(rid, None)
+        return out
+
+    def _generate(self, req_in):
+        req = self._enqueue(req_in)
+        req.done_event.wait(float(req_in.get("timeout", 120.0)))
+        with self._lock:
+            self.requests.pop(req.rid, None)
+        return {"tokens": list(req.out_tokens),
+                "done": req.done_event.is_set()}
+
+    def _stats(self, _req):
+        active = sum(1 for r in self.serve.slot_req if r is not None)
+        return {"active_slots": active, "n_slots": self.serve.n_slots,
+                "queued": self.serve.queue.qsize(), "steps": self.steps}
+
+    def _loop(self):
+        while not self._stop.is_set():
+            n = self.serve.step()
+            self.steps += 1 if n else 0
+            if n == 0 and self.serve.queue.empty():
+                time.sleep(0.005)
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

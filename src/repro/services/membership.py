@@ -1,0 +1,133 @@
+"""Membership / heartbeat service — the fault-tolerance control plane.
+
+A coordinator tracks live members; an *epoch* counter bumps whenever the
+member set changes (join, leave, heartbeat timeout).  Training drivers
+poll the epoch each step: on change they rebuild the mesh from the
+survivors and restore from the checkpoint service (elastic scaling +
+node-failure recovery, exercised in tests and the elastic example).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from ..core.executor import Engine
+
+
+class MembershipServer:
+    def __init__(self, engine: Engine, heartbeat_timeout: float = 2.0,
+                 sweep_interval: float = 0.5):
+        self.engine = engine
+        self.timeout = heartbeat_timeout
+        self.members: Dict[str, dict] = {}     # member_id -> info
+        self.epoch = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        engine.register("mem.join", self._join)
+        engine.register("mem.leave", self._leave)
+        engine.register("mem.heartbeat", self._heartbeat)
+        engine.register("mem.view", self._view)
+        self._sweeper = threading.Thread(
+            target=self._sweep_loop, args=(sweep_interval,), daemon=True)
+        self._sweeper.start()
+
+    def _join(self, req):
+        mid = req["member_id"]
+        with self._lock:
+            self.members[mid] = {
+                "uri": req.get("uri", ""), "meta": req.get("meta", {}),
+                "last": time.monotonic(),
+            }
+            self.epoch += 1
+            return self._view_locked()
+
+    def _leave(self, req):
+        with self._lock:
+            if self.members.pop(req["member_id"], None) is not None:
+                self.epoch += 1
+            return self._view_locked()
+
+    def _heartbeat(self, req):
+        with self._lock:
+            m = self.members.get(req["member_id"])
+            if m is None:
+                # expired member re-announcing: treat as join
+                self.members[req["member_id"]] = {
+                    "uri": req.get("uri", ""), "meta": {},
+                    "last": time.monotonic()}
+                self.epoch += 1
+            else:
+                m["last"] = time.monotonic()
+            return self._view_locked()
+
+    def _view(self, _req):
+        with self._lock:
+            return self._view_locked()
+
+    def _view_locked(self):
+        return {"epoch": self.epoch,
+                "members": sorted(self.members.keys()),
+                "uris": {k: v["uri"] for k, v in self.members.items()}}
+
+    def _sweep_loop(self, interval: float):
+        while not self._stop.is_set():
+            time.sleep(interval)
+            now = time.monotonic()
+            with self._lock:
+                dead = [k for k, v in self.members.items()
+                        if now - v["last"] > self.timeout]
+                for k in dead:
+                    del self.members[k]
+                if dead:
+                    self.epoch += 1
+
+    def stop(self):
+        self._stop.set()
+
+
+class MembershipClient:
+    def __init__(self, engine: Engine, server_uri: str, member_id: str,
+                 heartbeat_interval: float = 0.5,
+                 on_change: Optional[Callable[[dict], None]] = None):
+        self.engine = engine
+        self.server = server_uri
+        self.member_id = member_id
+        self.interval = heartbeat_interval
+        self.on_change = on_change
+        self.view: dict = {}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def join(self, meta: Optional[dict] = None) -> dict:
+        self.view = self.engine.call(self.server, "mem.join", {
+            "member_id": self.member_id, "uri": self.engine.uri,
+            "meta": meta or {}})
+        self._thread = threading.Thread(target=self._beat, daemon=True)
+        self._thread.start()
+        return self.view
+
+    def _beat(self):
+        while not self._stop.is_set():
+            time.sleep(self.interval)
+            try:
+                view = self.engine.call(self.server, "mem.heartbeat",
+                                        {"member_id": self.member_id,
+                                         "uri": self.engine.uri},
+                                        timeout=5.0)
+            except Exception:
+                continue
+            if view["epoch"] != self.view.get("epoch") and self.on_change:
+                self.on_change(view)
+            self.view = view
+
+    def current_view(self) -> dict:
+        return self.engine.call(self.server, "mem.view", {})
+
+    def leave(self):
+        self._stop.set()
+        try:
+            self.engine.call(self.server, "mem.leave",
+                             {"member_id": self.member_id}, timeout=5.0)
+        except Exception:
+            pass

@@ -1,0 +1,166 @@
+"""Optimizers: AdamW and Adafactor, with state-dtype policies.
+
+State is a P-tree (same logical axes as the params it shadows) so FSDP
+shards optimizer state exactly like ZeRO-3.  ``state_dtype`` lets the
+340B config keep m/v in bf16 (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import P, is_p
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"             # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"    # m/v dtype (bf16 for the 340B config)
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params_p) -> dict:
+    """params_p: P-tree → opt-state P-tree (m, v mirror params' axes)."""
+    def zeros_like_p(p: P, dtype) -> P:
+        return P(jnp.zeros(p.value.shape, dtype), p.axes)
+
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: zeros_like_p(p, jnp.float32), params_p, is_leaf=is_p),
+        "v": jax.tree_util.tree_map(
+            lambda p: zeros_like_p(p, jnp.float32), params_p, is_leaf=is_p),
+        "count": P(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def cast_state(opt_state, dtype):
+    dt = jnp.dtype(dtype)
+
+    def cast(p: P) -> P:
+        if p.value.ndim == 0:
+            return p
+        return P(p.value.astype(dt), p.axes)
+
+    return {
+        "m": jax.tree_util.tree_map(cast, opt_state["m"], is_leaf=is_p),
+        "v": jax.tree_util.tree_map(cast, opt_state["v"], is_leaf=is_p),
+        "count": opt_state["count"],
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: OptConfig, params, grads, m, v, count):
+    """All args plain value trees. Returns (params, m, v, count, stats)."""
+    count = count + 1
+    lr = schedule(cfg, count)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * clip
+        mf = m_.astype(jnp.float32)
+        vf = v_.astype(jnp.float32)
+        m_new = cfg.b1 * mf + (1 - cfg.b1) * g
+        v_new = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v_new / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        # dict marker (params trees contain tuples as *containers*, so a
+        # tuple leaf would be ambiguous to tree_map)
+        return {"__p": p_new.astype(p.dtype), "__m": m_new.astype(m_.dtype),
+                "__v": v_new.astype(v_.dtype)}
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    marker = lambda x: isinstance(x, dict) and "__p" in x
+    params_new = jax.tree_util.tree_map(lambda t: t["__p"], out, is_leaf=marker)
+    m_new = jax.tree_util.tree_map(lambda t: t["__m"], out, is_leaf=marker)
+    v_new = jax.tree_util.tree_map(lambda t: t["__v"], out, is_leaf=marker)
+    return params_new, m_new, v_new, count, {"grad_norm": gn, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for ≥2D tensors)
+# ---------------------------------------------------------------------------
+def adafactor_init(params_p) -> dict:
+    def state_for(p: P):
+        if p.value.ndim >= 2:
+            row = P(jnp.zeros(p.value.shape[:-1], jnp.float32),
+                    p.axes[:-1])
+            col = P(jnp.zeros(p.value.shape[:-2] + p.value.shape[-1:],
+                              jnp.float32), p.axes[:-2] + p.axes[-1:])
+            return {"row": row, "col": col}
+        return {"v": P(jnp.zeros(p.value.shape, jnp.float32), p.axes)}
+
+    return {
+        "f": jax.tree_util.tree_map(state_for, params_p, is_leaf=is_p),
+        "count": P(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def adafactor_update(cfg: OptConfig, params, grads, fstate, count):
+    count = count + 1
+    lr = schedule(cfg, count)
+    decay = 1.0 - (count.astype(jnp.float32) + 1.0) ** -0.8
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32) * clip
+        g2 = jnp.square(g) + 1e-30
+        if p.ndim >= 2:
+            row = decay * st["row"] + (1 - decay) * g2.mean(-1)
+            col = decay * st["col"] + (1 - decay) * g2.mean(-2)
+            rmean = row.mean(-1, keepdims=True)
+            vhat = (row / jnp.maximum(rmean, 1e-30))[..., None] * \
+                col[..., None, :]
+            new_st = {"row": row, "col": col}
+        else:
+            v = decay * st["v"] + (1 - decay) * g2
+            vhat = v
+            new_st = {"v": v}
+        step = g / jnp.sqrt(vhat + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return {"__p": p_new, "__st": new_st}
+
+    out = jax.tree_util.tree_map(upd, params, grads, fstate)
+    marker = lambda x: isinstance(x, dict) and "__p" in x
+    params_new = jax.tree_util.tree_map(lambda t: t["__p"], out, is_leaf=marker)
+    f_new = jax.tree_util.tree_map(lambda t: t["__st"], out, is_leaf=marker)
+    return params_new, f_new, count, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src layout on path regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# IMPORTANT: the dry-run's 512-device override must never leak into tests;
+# smoke tests and benches see the host's real (1-device) platform.
+os.environ.pop("XLA_FLAGS", None)

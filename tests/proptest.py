@@ -1,0 +1,28 @@
+"""Minimal property-test harness (the offline container has no
+`hypothesis`; this emulates its seeded-case style so the invariant tests
+read the same way and can be ported back verbatim)."""
+from __future__ import annotations
+
+import functools
+import numpy as np
+
+
+def cases(n: int = 25, seed: int = 0):
+    """Run the test n times with a seeded numpy Generator as first arg."""
+    def deco(fn):
+        def wrapper():
+            for i in range(n):
+                rng = np.random.default_rng(seed * 7919 + i)
+                try:
+                    fn(rng)
+                except AssertionError as e:
+                    raise AssertionError(f"[case {i}] {e}") from e
+        wrapper.__name__ = fn.__name__       # no __wrapped__: pytest must
+        wrapper.__doc__ = fn.__doc__         # see a zero-arg signature
+        return wrapper
+    return deco
+
+
+def draw_shape(rng, ndim_range=(1, 3), dim_range=(1, 17)):
+    nd = int(rng.integers(*ndim_range))
+    return tuple(int(rng.integers(*dim_range)) for _ in range(nd))

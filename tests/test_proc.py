@@ -1,0 +1,100 @@
+"""Proc (serialization) properties: roundtrip identity, wire compactness,
+dataclass derivation, error detection."""
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import pytest
+
+from repro.core import proc
+from repro.core.types import MercuryError
+
+from proptest import cases, draw_shape
+
+
+def roundtrip(p, v):
+    data = proc.encode(p, v)
+    out = proc.decode(p, data)
+    return out
+
+
+@cases(50)
+def test_varint_roundtrip(rng):
+    n = int(rng.integers(0, 2 ** 62))
+    assert roundtrip(proc.proc_varint, n) == n
+
+
+@cases(30)
+def test_scalars_roundtrip(rng):
+    for p, lo, hi in [(proc.proc_uint8, 0, 255),
+                      (proc.proc_int32, -2**31, 2**31 - 1),
+                      (proc.proc_int64, -2**63, 2**63 - 1)]:
+        v = int(rng.integers(lo, hi))
+        assert roundtrip(p, v) == v
+    f = float(rng.standard_normal())
+    assert roundtrip(proc.proc_float64, f) == f
+
+
+@cases(30)
+def test_ndarray_roundtrip(rng):
+    dt = rng.choice(["float32", "int32", "uint8", "float64", "int16"])
+    a = rng.standard_normal(draw_shape(rng)).astype(dt)
+    out = roundtrip(proc.proc_ndarray, a)
+    np.testing.assert_array_equal(a, out)
+    assert out.dtype == a.dtype
+
+
+@cases(30)
+def test_any_roundtrip(rng):
+    v = {
+        "s": "héllo",
+        "xs": [int(rng.integers(100)), 2.5, None, True],
+        "t": (1, "two"),
+        "nested": {"arr": rng.standard_normal((3, 2)).astype(np.float32)},
+        "b": b"\x00\xff",
+    }
+    out = roundtrip(proc.proc_any, v)
+    assert out["s"] == v["s"] and out["xs"] == v["xs"] and out["t"] == v["t"]
+    np.testing.assert_array_equal(out["nested"]["arr"], v["nested"]["arr"])
+    assert out["b"] == v["b"]
+
+
+def test_dataclass_derive():
+    @dataclasses.dataclass
+    class Inner:
+        xs: List[int]
+        name: str
+
+    @dataclasses.dataclass
+    class Msg:
+        a: int
+        b: float
+        inner: Inner
+        opt: Optional[str]
+        table: Dict[str, int]
+        arr: np.ndarray
+
+    p = proc.derive(Msg)
+    m = Msg(3, 2.5, Inner([1, 2], "x"), None, {"k": 9},
+            np.arange(6, dtype=np.int64).reshape(2, 3))
+    out = roundtrip(p, m)
+    assert out.a == 3 and out.inner.xs == [1, 2] and out.opt is None
+    np.testing.assert_array_equal(out.arr, m.arr)
+
+
+def test_decode_underflow_raises():
+    data = proc.encode(proc.proc_str, "hello")
+    with pytest.raises(MercuryError):
+        proc.decode(proc.proc_str, data[:2])
+
+
+def test_varint_compactness():
+    assert len(proc.encode(proc.proc_varint, 5)) == 1
+    assert len(proc.encode(proc.proc_varint, 300)) == 2
+
+
+def test_zero_copy_decode_views_buffer():
+    a = np.arange(1000, dtype=np.float32)
+    data = proc.encode(proc.proc_ndarray, a)
+    out = proc.decode(proc.proc_ndarray, data)
+    assert not out.flags["OWNDATA"]          # view into the message buffer

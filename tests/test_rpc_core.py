@@ -1,0 +1,98 @@
+"""RPC core semantics over both NA plugins: round trips, error paths,
+origin/target symmetry, concurrency, fire-and-forget."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executor import Engine, RemoteError
+from repro.core.types import Ret
+
+
+@pytest.fixture(params=["self", "tcp"])
+def engines(request):
+    if request.param == "self":
+        with Engine(None) as e:
+            yield e, e
+    else:
+        with Engine("tcp://127.0.0.1:0") as a, \
+                Engine("tcp://127.0.0.1:0") as b:
+            yield a, b
+
+
+def test_echo(engines):
+    srv, cli = engines
+    srv.register("echo", lambda x: x)
+    v = {"a": [1, 2.5, "x"], "arr": np.arange(4)}
+    out = cli.call(srv.uri, "echo", v)
+    assert out["a"] == v["a"]
+    np.testing.assert_array_equal(out["arr"], v["arr"])
+
+
+def test_unregistered_rpc_is_noentry(engines):
+    srv, cli = engines
+    with pytest.raises(RemoteError) as ei:
+        cli.call(srv.uri, "nope", 1, timeout=5.0)
+    assert ei.value.ret == Ret.NOENTRY
+
+
+def test_handler_fault_propagates(engines):
+    srv, cli = engines
+
+    def bad(_):
+        raise ValueError("boom")
+
+    srv.register("bad", bad)
+    with pytest.raises(RemoteError) as ei:
+        cli.call(srv.uri, "bad", None, timeout=5.0)
+    assert ei.value.ret == Ret.FAULT
+    assert "boom" in str(ei.value)
+
+
+def test_timeout(engines):
+    srv, cli = engines
+    srv.register("slow", lambda x: time.sleep(3.0) or x)
+    t0 = time.time()
+    with pytest.raises(RemoteError) as ei:
+        cli.call(srv.uri, "slow", None, timeout=0.3)
+    assert ei.value.ret == Ret.TIMEOUT
+    assert time.time() - t0 < 2.0
+
+
+def test_notify_fire_and_forget(engines):
+    srv, cli = engines
+    got = threading.Event()
+    srv.register("note", lambda x: got.set(), no_response=True)
+    cli.notify(srv.uri, "note", {"x": 1})
+    assert got.wait(5.0)
+
+
+def test_concurrent_calls(engines):
+    srv, cli = engines
+    srv.register("sq", lambda x: x * x)
+    futs = [cli.call_async(srv.uri, "sq", i) for i in range(32)]
+    assert [f.result(timeout=10) for f in futs] == [i * i for i in range(32)]
+
+
+def test_origin_target_symmetry():
+    """Paper C4: both endpoints serve and call simultaneously."""
+    with Engine("tcp://127.0.0.1:0") as a, Engine("tcp://127.0.0.1:0") as b:
+        a.register("ping_a", lambda x: ("a", x))
+        b.register("ping_b", lambda x: ("b", x))
+        assert a.call(b.uri, "ping_b", 1) == ("b", 1)
+        assert b.call(a.uri, "ping_a", 2) == ("a", 2)
+
+        # and a handler on b that itself calls back into a (service chain)
+        def chained(x):
+            return b.call(a.uri, "ping_a", x)[1] + 1
+
+        b.register("chain", chained)
+        assert a.call(b.uri, "chain", 10) == 11
+
+
+def test_large_eager_payload(engines):
+    srv, cli = engines
+    srv.register("blob", lambda x: np.asarray(x).sum())
+    a = np.ones(200_000, dtype=np.float64)      # 1.6 MB inline
+    assert cli.call(srv.uri, "blob", a, timeout=30) == 200_000.0

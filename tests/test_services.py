@@ -1,0 +1,171 @@
+"""Service-layer integration: checkpoint (incl. corruption detection),
+membership failure detection, datafeed eager/bulk parity, straggler
+mitigation, gateway end-to-end."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import Engine, RemoteError
+from repro.core.types import Ret
+from repro.data.pipeline import Prefetcher, SyntheticSource
+from repro.services import (CheckpointClient, CheckpointServer,
+                            DataFeedClient, DataFeedServer,
+                            MembershipClient, MembershipServer,
+                            replicated_call)
+from repro.services.base import checksum_of, flatten_named, unflatten_named
+
+
+@pytest.fixture
+def tcp_pair():
+    with Engine("tcp://127.0.0.1:0") as a, Engine("tcp://127.0.0.1:0") as b:
+        yield a, b
+
+
+def test_checkpoint_roundtrip(tcp_pair):
+    srv, cli_e = tcp_pair
+    CheckpointServer(srv)
+    cli = CheckpointClient(cli_e, srv.uri)
+    tree = {"params": {"w": np.arange(60_000, dtype=np.float32).reshape(300, 200)},
+            "opt": (np.ones(5, np.int64), {"count": np.int32(7)})}
+    assert cli.save("m", 3, tree)["ok"]
+    tpl = jax.tree_util.tree_map(np.zeros_like, tree)
+    out, step = cli.restore("m", tpl)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_latest_and_list(tcp_pair):
+    srv, cli_e = tcp_pair
+    CheckpointServer(srv)
+    cli = CheckpointClient(cli_e, srv.uri)
+    tree = {"x": np.ones(10, np.float32)}
+    cli.save("m", 1, tree)
+    cli.save("m", 5, {"x": np.full(10, 5.0, np.float32)})
+    out, step = cli.restore("m", jax.tree_util.tree_map(np.zeros_like, tree))
+    assert step == 5 and out["x"][0] == 5.0
+    assert {c["step"] for c in cli.list()} == {1, 5}
+
+
+def test_checkpoint_checksum_detects_corruption(tcp_pair):
+    srv, cli_e = tcp_pair
+    server = CheckpointServer(srv)
+    cli = CheckpointClient(cli_e, srv.uri)
+    cli.save("m", 1, {"x": np.arange(1000, dtype=np.float32)})
+    # corrupt the stored shard behind the server's back
+    entry = server.store[("m", 1)]
+    list(entry["named"].values())[0][17] = 1e9
+    with pytest.raises(Exception):
+        cli.restore("m", {"x": np.zeros(1000, np.float32)})
+
+
+def test_checkpoint_restore_missing(tcp_pair):
+    srv, cli_e = tcp_pair
+    CheckpointServer(srv)
+    cli = CheckpointClient(cli_e, srv.uri)
+    with pytest.raises(RemoteError):
+        cli.restore("ghost", {"x": np.zeros(1)})
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {"a": np.ones((2, 3)), "b": (np.zeros(4), {"c": np.int32(2)})}
+    named = flatten_named(tree)
+    out = unflatten_named(jax.tree_util.tree_map(np.zeros_like, tree), named)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_membership_failure_detection():
+    with Engine("tcp://127.0.0.1:0") as coord, \
+            Engine("tcp://127.0.0.1:0") as w1, \
+            Engine("tcp://127.0.0.1:0") as w2:
+        ms = MembershipServer(coord, heartbeat_timeout=0.5,
+                              sweep_interval=0.1)
+        changes = []
+        c1 = MembershipClient(w1, coord.uri, "w1", 0.1,
+                              on_change=lambda v: changes.append(v))
+        c2 = MembershipClient(w2, coord.uri, "w2", 0.1)
+        c1.join()
+        c2.join()
+        time.sleep(0.4)
+        assert c1.current_view()["members"] == ["w1", "w2"]
+        # kill w2's heartbeat (simulated node failure)
+        c2._stop.set()
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            if c1.current_view()["members"] == ["w1"]:
+                break
+            time.sleep(0.1)
+        assert c1.current_view()["members"] == ["w1"]
+        assert changes, "on_change must fire on epoch bump"
+        ms.stop()
+        c1.leave()
+
+
+def test_datafeed_eager_vs_bulk_identical():
+    src = SyntheticSource(vocab=500, seq_len=64, batch_per_host=4)
+    with Engine("tcp://127.0.0.1:0") as fe_eager, \
+            Engine("tcp://127.0.0.1:0") as fe_bulk, \
+            Engine("tcp://127.0.0.1:0") as tr:
+        DataFeedServer(fe_eager, src, eager_limit=1 << 30)
+        DataFeedServer(fe_bulk, src, eager_limit=1)
+        c_eager = DataFeedClient(tr, [fe_eager.uri])
+        c_bulk = DataFeedClient(tr, [fe_bulk.uri])
+        b1, b2 = c_eager.get(7), c_bulk.get(7)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k])
+
+
+def test_datafeed_prefetch_pipeline():
+    src = SyntheticSource(vocab=100, seq_len=32, batch_per_host=2)
+    with Engine("tcp://127.0.0.1:0") as fe, Engine("tcp://127.0.0.1:0") as tr:
+        DataFeedServer(fe, src)
+        cli = DataFeedClient(tr, [fe.uri], depth=3)
+        for step in range(6):
+            b = cli.get(step)
+            np.testing.assert_array_equal(b["tokens"],
+                                          src.batch_at(step)["tokens"])
+
+
+def test_replicated_call_first_wins_over_straggler():
+    with Engine("tcp://127.0.0.1:0") as slow, \
+            Engine("tcp://127.0.0.1:0") as fast, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        slow.register("work", lambda x: time.sleep(5.0) or "slow")
+        fast.register("work", lambda x: "fast")
+        t0 = time.time()
+        out = replicated_call(cli, [slow.uri, fast.uri], "work", None,
+                              timeout=10.0)
+        assert out == "fast"
+        assert time.time() - t0 < 3.0
+
+
+def test_replicated_call_survives_dead_target():
+    with Engine("tcp://127.0.0.1:0") as ok, Engine("tcp://127.0.0.1:0") as cli:
+        ok.register("work", lambda x: 42)
+        out = replicated_call(cli, ["tcp://127.0.0.1:1", ok.uri], "work",
+                              None, timeout=5.0)
+        assert out == 42
+
+
+def test_prefetcher_overlaps():
+    class SlowSource:
+        def __iter__(self):
+            def gen():
+                for i in range(5):
+                    time.sleep(0.05)
+                    yield {"i": np.int32(i)}
+            return gen()
+
+    pf = Prefetcher(SlowSource(), depth=3)
+    time.sleep(0.3)                      # let it run ahead
+    t0 = time.time()
+    vals = [next(pf)["i"] for _ in range(3)]
+    assert time.time() - t0 < 0.1        # already buffered
+    assert vals == [0, 1, 2]
+    pf.close()

@@ -1,0 +1,122 @@
+"""Sharded-compile tests: the dry-run machinery on a small real device
+mesh (8 host devices in a subprocess), covering train/prefill/decode
+lowering for a dense and a MoE arch, plus the mesh constructors."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from repro import configs
+    from repro.configs.base import ParallelConfig
+    from repro.models import Model, unzip
+    from repro.models.moe import padded_experts
+    from repro.distrib import tree_shardings
+    from repro.train import optim
+    from repro.train.step import init_state, make_train_step
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    import dataclasses
+    for arch in ["qwen1.5-0.5b", "granite-moe-3b-a800m"]:
+        cfg = configs.reduced(arch).replace(compute_dtype="float32")
+        if cfg.moe.num_experts:
+            # capacity is per token-shard under SPMD; compare dropless so
+            # sharded == local exactly
+            cfg = cfg.replace(moe=dataclasses.replace(
+                cfg.moe, capacity_factor=16.0))
+        e_pad = padded_experts(cfg, 4) if cfg.moe.num_experts else None
+        model = Model(cfg, e_pad=e_pad)
+        ocfg = optim.OptConfig(lr=1e-3, warmup=0, decay_steps=10)
+        par = ParallelConfig(remat="block")
+
+        state, axes = init_state(model, ocfg, jax.random.PRNGKey(0))
+        sh = tree_shardings(
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+            axes, mesh)
+        state = jax.device_put(state, sh)
+        batch = {
+            "tokens": jnp.zeros((8, 32), jnp.int32),
+            "targets": jnp.zeros((8, 32), jnp.int32),
+        }
+        bsh = {k: NamedSharding(mesh, PS("data")) for k in batch}
+        batch = jax.device_put(batch, bsh)
+
+        with mesh:
+            step = jax.jit(make_train_step(model, ocfg, par, mesh),
+                           in_shardings=(sh, bsh), out_shardings=(sh, None))
+            state2, metrics = step(state, batch)
+            assert np.isfinite(float(metrics["loss"])), arch
+
+            # sharded-vs-single-device parity of the loss
+            from repro.train.step import make_moe_spmd
+            spmd = make_moe_spmd(cfg, par, mesh)
+            loss_sh, _ = jax.jit(
+                lambda p, b: model.loss_fn(p, b, spmd=spmd, impl="xla",
+                                           remat="none"))(state["params"],
+                                                          batch)
+        loss_local, _ = model.loss_fn(
+            jax.tree_util.tree_map(np.asarray, state["params"]),
+            jax.tree_util.tree_map(np.asarray, batch),
+            impl="xla", remat="none")
+        np.testing.assert_allclose(float(loss_sh), float(loss_local),
+                                   rtol=2e-4)
+        print(f"TRAIN_OK {arch} {float(metrics['loss']):.4f}")
+
+    # decode lowering with a sequence-sharded cache
+    cfg = configs.reduced("qwen1.5-0.5b")
+    model = Model(cfg)
+    params, paxes = unzip(model.init(jax.random.PRNGKey(0)))
+    psh = tree_shardings(
+        jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+        paxes, mesh)
+    cache_p = jax.eval_shape(lambda: model.cache_specs(8, 64, jnp.bfloat16))
+    cache_sds, caxes = unzip(cache_p)
+    csh = tree_shardings(cache_sds, caxes, mesh)
+    tok = jax.ShapeDtypeStruct((8, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    with mesh:
+        lowered = jax.jit(
+            lambda p, c, t, s: model.decode_step(p, c, t, s, impl="xla"),
+            in_shardings=(psh, csh, NamedSharding(mesh, PS("data")), None),
+            out_shardings=(None, csh)).lower(
+                jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+                cache_sds, tok, pos)
+        compiled = lowered.compile()
+        assert compiled.memory_analysis() is not None
+    print("DECODE_LOWER_OK")
+
+    from repro.launch.mesh import make_local_mesh
+    m2 = make_local_mesh(model_axis=2)
+    assert m2.shape == {"data": 4, "model": 2}
+    print("MESH_OK")
+""")
+
+
+def test_sharded_train_and_decode():
+    r = subprocess.run([sys.executable, "-c", SCRIPT],
+                       capture_output=True, text=True, timeout=900, cwd=".")
+    out = r.stdout + r.stderr
+    assert "TRAIN_OK qwen1.5-0.5b" in r.stdout, out
+    assert "TRAIN_OK granite-moe-3b-a800m" in r.stdout, out
+    assert "DECODE_LOWER_OK" in r.stdout, out
+    assert "MESH_OK" in r.stdout, out
+
+
+def test_production_mesh_shapes():
+    # AbstractMesh mirrors make_production_mesh without touching devices
+    from jax.sharding import AbstractMesh
+    single = AbstractMesh((16, 16), ("data", "model"))
+    multi = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    assert single.size == 256 and multi.size == 512
+    assert tuple(multi.axis_names) == ("pod", "data", "model")
