@@ -22,7 +22,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .na.base import NAAddress, NAMemHandle, NAPlugin
+from .na.base import NAAddress, NACap, NAMemHandle, NAPlugin
 from .progress import Context
 from .types import CallbackInfo, MercuryError, OpType, Ret
 
@@ -175,6 +175,12 @@ def bulk_transfer(context: Context, op: BulkOpType, remote_addr: NAAddress,
         context.completion_add(cb, CallbackInfo(OpType.BULK, Ret.SUCCESS,
                                                 bulk_op=bop, arg=arg))
         return bop
+
+    # Zero-copy fast path: when the plugin's put/get against this peer is a
+    # native one-sided copy, chunking/pipelining only adds bookkeeping —
+    # issue each contiguous segment pair as a single transfer.
+    if na.caps_for(remote_addr) & NACap.NATIVE_RMA:
+        chunk_size = max(chunk_size, size)
 
     local_pieces = local._resolve(local_offset, size)
     remote_segs = [(s, s.size) for s in remote.segments]

@@ -46,9 +46,13 @@ class Engine:
     can ``register`` handlers and ``call`` remote ones.
     """
 
-    def __init__(self, uri: Optional[str] = None, listen: bool = True,
+    def __init__(self, uri: Optional[str | Sequence[str]] = None,
+                 listen: bool = True,
                  handler_threads: int = 4, checksum: bool = True,
                  progress_interval: float = 0.05):
+        """``uri`` may be one transport URI, a semicolon-joined address set
+        (``"self://a;sm://a;tcp://127.0.0.1:0"``) or a list of URIs; multi-
+        transport engines resolve each target to its cheapest tier."""
         self.na: NAPlugin = initialize(uri, listen=listen)
         self.hg = HGClass(self.na, checksum_payloads=checksum)
         self.ctx: Context = self.hg.context

@@ -11,6 +11,8 @@ which is what makes new fabric plugins cheap to write:
 
 Plugins implemented here:
   * ``self``  — in-process loopback (tests, benchmarks, co-located services)
+  * ``sm``    — shared-memory rings + one-sided RMA over
+                ``multiprocessing.shared_memory`` (same-host services)
   * ``tcp``   — real non-blocking sockets; RMA emulated with
                 request/response chunks exactly like Mercury's tcp provider
 On a real TPU cluster the host-side DCN uses ``tcp``; on-mesh (ICI) data
@@ -20,6 +22,7 @@ movement is compiled into XLA programs and is *not* routed through NA
 from __future__ import annotations
 
 import abc
+import enum
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -33,6 +36,27 @@ NACallback = Callable[..., None]
 
 UNEXPECTED_MSG_LIMIT = 64 * 1024   # eager limit for unexpected messages
 EXPECTED_MSG_LIMIT = 16 * 1024 * 1024
+
+
+class NACap(enum.IntFlag):
+    """Capability flags a plugin advertises (checked by upper layers)."""
+
+    NONE = 0
+    NATIVE_RMA = 1       # put/get is one-sided for real: no target-side
+                         # progress, no request/response emulation
+    ZERO_COPY = 2        # put/get is a single direct copy into the
+                         # destination buffer (no framing/staging copies)
+    SAME_HOST = 4        # transport only reaches peers on this host
+    SAME_PROCESS = 8     # transport only reaches peers in this process
+
+
+# Locality tiers — lower is cheaper; used by multi-transport resolution.
+TIER_SELF = 0    # same process
+TIER_SM = 1      # same host (shared memory)
+TIER_NET = 2     # network
+
+SCHEME_TIERS = {"self": TIER_SELF, "sm": TIER_SM,
+                "tcp": TIER_NET, "tcp-anon": TIER_NET}
 
 
 class NAAddress(abc.ABC):
@@ -66,6 +90,7 @@ class NAMemHandle:
     read_allowed: bool = True
     write_allowed: bool = True
     local_buf: Optional[memoryview] = None  # not serialized
+    sub: Optional[Dict[str, "NAMemHandle"]] = None  # multi-transport aliases
 
 
 class NAOp:
@@ -89,10 +114,33 @@ class NAPlugin(abc.ABC):
     """Minimal transport plugin interface (mirrors na_class_t ops)."""
 
     name: str = "abstract"
+    caps: NACap = NACap.NONE
+    tier: int = TIER_NET
+    # eager-message limits (see DESIGN.md §3): senders exceeding these get
+    # Ret.MSGSIZE; the RPC layer switches to rendezvous before hitting them.
+    max_unexpected_size: int = UNEXPECTED_MSG_LIMIT
+    max_expected_size: int = EXPECTED_MSG_LIMIT
 
     def __init__(self):
         self._op_counter = _Counter()
         self._mem_counter = _Counter()
+
+    def caps_for(self, addr: "NAAddress") -> NACap:
+        """Capabilities in effect when talking to ``addr`` (multi-transport
+        plugins route this per destination)."""
+        return self.caps
+
+    # -- staging buffers ------------------------------------------------------
+    def alloc_msg_buffer(self, nbytes: int) -> Optional[np.ndarray]:
+        """Optional transport-preferred staging memory for rendezvous
+        payloads.  Plugins whose RMA needs special memory (sm: shm-backed
+        segments reachable from other processes) return an array here;
+        ``None`` means plain heap memory works (self, tcp)."""
+        return None
+
+    def free_msg_buffer(self, arr: np.ndarray) -> None:
+        """Release a buffer from :meth:`alloc_msg_buffer` (no-op for
+        buffers this plugin does not own)."""
 
     # -- addressing --------------------------------------------------------
     @abc.abstractmethod
@@ -127,7 +175,10 @@ class NAPlugin(abc.ABC):
     # -- one-sided RMA -------------------------------------------------------
     @abc.abstractmethod
     def mem_register(self, buf: memoryview | np.ndarray,
-                     read: bool = True, write: bool = True) -> NAMemHandle: ...
+                     read: bool = True, write: bool = True,
+                     key: Optional[int] = None) -> NAMemHandle:
+        """Register memory for one-sided access.  ``key`` lets a wrapping
+        multi-transport plugin assign one key valid across transports."""
 
     @abc.abstractmethod
     def mem_deregister(self, mh: NAMemHandle) -> None: ...
@@ -163,6 +214,18 @@ class NAPlugin(abc.ABC):
     # -- helpers -------------------------------------------------------------
     def _new_op(self, kind: str) -> NAOp:
         return NAOp(self._op_counter.next(), kind)
+
+    def _check_msg_size(self, data, limit: int, kind: str) -> int:
+        """Enforce an eager-message limit; returns the flattened length."""
+        if isinstance(data, tuple):
+            n = sum(len(memoryview(d).cast("B")) for d in data)
+        else:
+            n = len(memoryview(data).cast("B"))
+        if n > limit:
+            raise MercuryError(
+                Ret.MSGSIZE, f"{kind} message {n}B exceeds {self.name} "
+                             f"limit {limit}B (use bulk RMA)")
+        return n
 
     @staticmethod
     def as_view(buf) -> memoryview:

@@ -18,7 +18,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..types import MercuryError, Ret
-from .base import NAAddress, NACallback, NAMemHandle, NAOp, NAPlugin
+from .base import (NAAddress, NACallback, NACap, NAMemHandle, NAOp, NAPlugin,
+                   TIER_SELF)
 
 _REGISTRY: Dict[str, "SelfPlugin"] = {}
 _REGISTRY_LOCK = threading.Lock()
@@ -32,6 +33,9 @@ class SelfAddress(NAAddress):
 
 class SelfPlugin(NAPlugin):
     name = "self"
+    caps = NACap.NATIVE_RMA | NACap.ZERO_COPY | NACap.SAME_PROCESS
+    tier = TIER_SELF
+    max_expected_size = 1 << 62          # a memcpy: no framing limit
 
     def __init__(self, uri: Optional[str] = None):
         super().__init__()
@@ -65,6 +69,12 @@ class SelfPlugin(NAPlugin):
     def addr_lookup(self, uri: str) -> NAAddress:
         if not uri.startswith("self://"):
             raise MercuryError(Ret.INVALID_ARG, f"not a self uri: {uri}")
+        # reachability probe: the peer must live in this process (this is
+        # what lets tiered resolution fall through to sm/tcp)
+        with _REGISTRY_LOCK:
+            inst = _REGISTRY.get(uri)
+        if inst is None or inst._finalized:
+            raise MercuryError(Ret.DISCONNECT, f"no in-process peer at {uri}")
         return SelfAddress(uri)
 
     @staticmethod
@@ -77,6 +87,7 @@ class SelfPlugin(NAPlugin):
 
     # -- messaging -----------------------------------------------------------
     def msg_send_unexpected(self, dest, data, tag, cb) -> NAOp:
+        self._check_msg_size(data, self.max_unexpected_size, "unexpected")
         op = self._new_op("send_unexpected")
         peer = self._resolve(dest)
         with peer._lock:
@@ -94,6 +105,7 @@ class SelfPlugin(NAPlugin):
         return op
 
     def msg_send_expected(self, dest, data, tag, cb) -> NAOp:
+        self._check_msg_size(data, self.max_expected_size, "expected")
         op = self._new_op("send_expected")
         peer = self._resolve(dest)
         with peer._lock:
@@ -112,9 +124,9 @@ class SelfPlugin(NAPlugin):
         return op
 
     # -- RMA -----------------------------------------------------------------
-    def mem_register(self, buf, read=True, write=True) -> NAMemHandle:
+    def mem_register(self, buf, read=True, write=True, key=None) -> NAMemHandle:
         view = self.as_view(buf)
-        key = self._mem_counter.next()
+        key = key if key is not None else self._mem_counter.next()
         with self._lock:
             self._mem[key] = view
         return NAMemHandle(key=key, size=view.nbytes, owner_uri=self._uri,

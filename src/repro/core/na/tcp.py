@@ -23,7 +23,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..types import MercuryError, Ret, _Counter
-from .base import NAAddress, NACallback, NAMemHandle, NAOp, NAPlugin
+from .base import (NAAddress, NACallback, NACap, NAMemHandle, NAOp, NAPlugin,
+                   TIER_NET, UNEXPECTED_MSG_LIMIT)
 
 _U32 = struct.Struct("<I")
 _FRAME_HDR = struct.Struct("<IB")  # total payload len (incl kind byte? no: after), kind
@@ -78,6 +79,10 @@ class _Conn:
 
 class TCPPlugin(NAPlugin):
     name = "tcp"
+    caps = NACap.NONE                    # RMA is frame-emulated
+    tier = TIER_NET
+    max_unexpected_size = UNEXPECTED_MSG_LIMIT
+    max_expected_size = MAX_FRAME - 4096  # response framing headroom
 
     def __init__(self, uri: Optional[str] = None, listen: bool = True):
         super().__init__()
@@ -210,6 +215,7 @@ class TCPPlugin(NAPlugin):
 
     # -- messaging API ---------------------------------------------------------
     def msg_send_unexpected(self, dest, data, tag, cb) -> NAOp:
+        self._check_msg_size(data, self.max_unexpected_size, "unexpected")
         op = self._new_op("send_unexpected")
         if not isinstance(data, tuple):
             data = bytes(data)
@@ -232,6 +238,7 @@ class TCPPlugin(NAPlugin):
         return op
 
     def msg_send_expected(self, dest, data, tag, cb) -> NAOp:
+        self._check_msg_size(data, self.max_expected_size, "expected")
         op = self._new_op("send_expected")
         if not isinstance(data, tuple):
             data = bytes(data)
@@ -255,9 +262,9 @@ class TCPPlugin(NAPlugin):
         return op
 
     # -- RMA ---------------------------------------------------------------------
-    def mem_register(self, buf, read=True, write=True) -> NAMemHandle:
+    def mem_register(self, buf, read=True, write=True, key=None) -> NAMemHandle:
         view = self.as_view(buf)
-        key = self._mem_counter.next()
+        key = key if key is not None else self._mem_counter.next()
         with self._lock:
             self._mem[key] = (view, read, write)
         return NAMemHandle(key=key, size=view.nbytes, owner_uri=self._uri,

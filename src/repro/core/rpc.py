@@ -23,12 +23,15 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
+import numpy as np
+
 from . import proc as hg_proc
+from .bulk import BulkDescriptor, BulkHandle, BulkOpType, bulk_transfer
 from .na.base import NAAddress, NAPlugin, UNEXPECTED_MSG_LIMIT
 from .progress import Context
 from .types import (Callback, CallbackInfo, Flags, MercuryError, OpType,
-                    RequestHeader, ResponseHeader, Ret, _Counter,
-                    payload_crc32, stable_rpc_id)
+                    REQUEST_HEADER_SIZE, RequestHeader, ResponseHeader, Ret,
+                    _Counter, payload_crc32, stable_rpc_id)
 
 
 @dataclass
@@ -66,11 +69,21 @@ class Handle:
         self._input_raw: Optional[memoryview] = None
         self._input: Any = None
         self._input_decoded = False
+        self._payload_bulk: Optional[BulkHandle] = None
+        self._payload_staged = None     # shm staging buffer (sm rendezvous)
         self._deadline_entry: Optional[dict] = None
         self._recv_op = None
         self._completed = False
         self._lock = threading.Lock()
         self.responded = False
+
+    def _release_payload(self) -> None:
+        if self._payload_bulk is not None:
+            self._payload_bulk.free()
+            self._payload_bulk = None
+        if self._payload_staged is not None:
+            self.hg.na.free_msg_buffer(self._payload_staged)
+            self._payload_staged = None
 
     # ------------------------------------------------------------------ origin
     def forward(self, input_value: Any, cb: Optional[Callback] = None,
@@ -88,15 +101,43 @@ class Handle:
             crc = payload_crc32(payload)
         if self.rpc.no_response:
             flags |= Flags.NO_RESPONSE
-        hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
-                            len(payload), crc)
-        msg = (hdr.pack(), payload)       # vectored: no payload copy
+        limit = getattr(hg.na, "max_unexpected_size", UNEXPECTED_MSG_LIMIT)
+        if REQUEST_HEADER_SIZE + len(payload) > limit:
+            # Rendezvous: the unexpected message carries only a bulk
+            # descriptor; the target pulls the payload one-sidedly (a
+            # single zero-copy on plugins with native RMA).
+            if self.rpc.no_response:
+                raise MercuryError(
+                    Ret.MSGSIZE,
+                    f"NO_RESPONSE rpc payload {len(payload)}B exceeds the "
+                    f"eager limit {limit}B; origin cannot learn when the "
+                    f"pull finished")
+            flags |= Flags.RENDEZVOUS
+            # transports whose RMA needs special memory (sm: cross-process
+            # pulls only reach shm-backed registrations) stage the payload
+            staged = hg.na.alloc_msg_buffer(len(payload))
+            if staged is not None:
+                staged[:len(payload)] = np.frombuffer(payload, np.uint8)
+                self._payload_staged = staged
+                reg_buf = staged[:len(payload)]
+            else:
+                reg_buf = np.frombuffer(payload, np.uint8)
+            self._payload_bulk = BulkHandle(hg.na, [reg_buf],
+                                            read=True, write=False)
+            hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
+                                len(payload), crc)
+            msg = (hdr.pack(), self._payload_bulk.descriptor().to_bytes())
+        else:
+            hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
+                                len(payload), crc)
+            msg = (hdr.pack(), payload)   # vectored: no payload copy
 
         def complete(ret: Ret, output: Any = None):
             with self._lock:
                 if self._completed:
                     return
                 self._completed = True
+            self._release_payload()
             self.ret = ret
             self.output = output
             if self._deadline_entry is not None:
@@ -160,6 +201,7 @@ class Handle:
             if self._completed:
                 return
             self._completed = True
+        self._release_payload()
         self.ret = Ret.CANCELED
         if self._deadline_entry is not None:
             self.info.context.disarm(self._deadline_entry)
@@ -177,7 +219,6 @@ class Handle:
             raise MercuryError(Ret.INVALID_ARG, "RPC registered as NO_RESPONSE")
         if self.responded:
             raise MercuryError(Ret.INVALID_ARG, "respond() called twice")
-        self.responded = True
         hg = self.hg
         if ret == Ret.SUCCESS:
             payload = hg_proc.encode(self.rpc.out_proc, output) \
@@ -194,8 +235,11 @@ class Handle:
             ctx.completion_add(cb, CallbackInfo(OpType.RESPOND, send_ret,
                                                 handle=self))
 
+        # may raise MSGSIZE: leave ``responded`` unset so the handler's
+        # error path can still send a (small) failure response
         hg.na.msg_send_expected(self.info.addr, (hdr.pack(), payload),
                                 self.cookie, on_sent)
+        self.responded = True
 
 
 class HGClass:
@@ -269,10 +313,9 @@ class HGClass:
             hdr = RequestHeader.unpack(data)
         except MercuryError:
             return
-        body = data[RequestHeader(0, 0).pack().__len__():]
+        body = data[REQUEST_HEADER_SIZE:]
         info = self.registered.get(hdr.rpc_id)
 
-        # Build the target-side handle (even for errors, to respond NOENTRY)
         if info is None:
             if not (hdr.flags & Flags.NO_RESPONSE):
                 rhdr = ResponseHeader(hdr.cookie, Ret.NOENTRY, 0, 0)
@@ -280,6 +323,58 @@ class HGClass:
                                           lambda r: None)
             return
 
+        if hdr.flags & Flags.RENDEZVOUS:
+            self._pull_then_dispatch(info, hdr, source, body)
+        else:
+            self._dispatch(info, hdr, source, body)
+
+    def _pull_then_dispatch(self, info: RPCInfo, hdr: RequestHeader,
+                            source: NAAddress, desc_bytes: memoryview) -> None:
+        """Oversized request: the body is a bulk descriptor — pull the real
+        payload one-sidedly (zero-copy on native-RMA plugins), then proceed
+        exactly as the eager path."""
+
+        def fail(ret: Ret) -> None:
+            if not (hdr.flags & Flags.NO_RESPONSE):
+                rhdr = ResponseHeader(hdr.cookie, ret, 0, 0)
+                self.na.msg_send_expected(source, rhdr.pack(), hdr.cookie,
+                                          lambda r: None)
+
+        try:
+            desc = BulkDescriptor.from_bytes(desc_bytes)
+        except Exception:
+            fail(Ret.PROTOCOL_ERROR)
+            return
+        # the descriptor is peer-controlled: allocate only what the header
+        # declared, and refuse disagreement instead of trusting desc.size
+        if desc.size != hdr.payload_len:
+            fail(Ret.PROTOCOL_ERROR)
+            return
+        try:
+            buf = bytearray(desc.size)
+            lh = BulkHandle(self.na, [buf], read=True, write=True)
+        except (MemoryError, MercuryError):
+            fail(Ret.NOMEM)
+            return
+
+        def on_pulled(cbinfo: CallbackInfo):
+            lh.free()
+            if cbinfo.ret != Ret.SUCCESS:
+                fail(cbinfo.ret)
+                return
+            self._dispatch(info, hdr, source, memoryview(buf))
+
+        try:
+            # a plugin may raise synchronously from put/get (sm does for
+            # unreachable registrations) — keep that off the progress thread
+            bulk_transfer(self.context, BulkOpType.GET, source, desc, 0, lh,
+                          0, desc.size, on_pulled)
+        except MercuryError as e:
+            lh.free()
+            fail(e.ret)
+
+    def _dispatch(self, info: RPCInfo, hdr: RequestHeader, source: NAAddress,
+                  body: memoryview) -> None:
         handle = Handle(self, HandleInfo(source, hdr.rpc_id, self.context), info)
         handle.cookie = hdr.cookie
         handle._input_raw = body

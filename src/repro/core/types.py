@@ -32,6 +32,7 @@ class Ret(enum.IntEnum):
     DISCONNECT = 9
     AGAIN = 10
     PERMISSION = 11
+    MSGSIZE = 12         # message exceeds the transport's eager limit
 
 
 class OpType(enum.IntEnum):
@@ -75,7 +76,7 @@ class Flags(enum.IntFlag):
     NONE = 0
     NO_RESPONSE = 1      # fire-and-forget RPC
     CHECKSUM = 2         # payload CRC is present/verified
-    MORE = 4             # reserved: multi-part payload
+    RENDEZVOUS = 4       # body is a bulk descriptor; target pulls the payload
 
 
 @dataclass(frozen=True)

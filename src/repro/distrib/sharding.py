@@ -26,6 +26,19 @@ from ..models.common import Axes
 
 Rules = Dict[str, Tuple[str, ...]]
 
+
+def abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Device-less mesh for spec resolution, across JAX API revisions.
+
+    Newer JAX takes ``AbstractMesh(((name, size), ...))``; older releases
+    took ``(shape, axis_names)`` positionally.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except (TypeError, ValueError):
+        return AbstractMesh(shape, axes)
+
 # rule values are *ordered preferences*; () / missing = replicate
 DEFAULT_RULES: Rules = {
     # ---- weights: TP dims

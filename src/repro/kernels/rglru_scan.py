@@ -50,8 +50,8 @@ def _kernel(x_ref, r_ref, i_ref, ll_ref, h0_ref, o_ref, hf_ref, h_ref, *,
         a_t = jax.lax.dynamic_slice_in_dim(a, t, 1, 0)
         b_t = jax.lax.dynamic_slice_in_dim(b, t, 1, 0)
         h = a_t * h + b_t
-        pl.store(o_ref, (0, pl.ds(t, 1), slice(None)),
-                 h.astype(o_ref.dtype))
+        pl.store(o_ref, (pl.ds(0, 1), pl.ds(t, 1), slice(None)),
+                 h.astype(o_ref.dtype)[None])
         return h
 
     h = jax.lax.fori_loop(0, tc, step, h_ref[...])

@@ -80,13 +80,25 @@ class ServeEngine:
     def submit(self, prompt, max_new: int = 32, temperature: float = 0.0,
                eos_id: int = -1, frontend=None,
                on_token=None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        span = len(prompt) + (self.model.cfg.frontend_seq
+                              if frontend is not None else 0)
+        if span + max_new > self.max_len:
+            raise ValueError(
+                f"prompt span {span} + max_new {max_new} exceeds the "
+                f"cache length {self.max_len}")
         with self._lock:
             self._rid += 1
             rid = self._rid
-        req = Request(rid, np.asarray(prompt, np.int32), max_new,
+        req = Request(rid, prompt, max_new,
                       temperature, eos_id, frontend, on_token=on_token)
         self.queue.put(req)
         return req
+
+    def stats(self) -> Dict[str, int]:
+        return {"active_slots": sum(1 for r in self.slot_req if r is not None),
+                "n_slots": self.n_slots, "queued": self.queue.qsize(),
+                "max_len": self.max_len}
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]

@@ -3,6 +3,10 @@
 RPCs:
   ``gen.submit``   {tokens, max_new, temperature, eos_id[, frontend]}
                    → {rid}                      (non-blocking enqueue)
+  ``gen.submit_bulk`` {desc, count, ...} — the prompt tokens stay in the
+                   client's registered memory; the gateway pulls them
+                   one-sidedly (zero-copy on sm/self transports) instead
+                   of carrying them in the eager message
   ``gen.result``   {rid[, wait]} → {tokens, done}
   ``gen.generate`` blocking submit+wait (handler parks on the request's
                    done event — it runs on the engine's handler pool, so
@@ -21,6 +25,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from ..core.bulk import BulkDescriptor
 from ..core.executor import Engine
 from ..serve.engine import Request, ServeEngine
 
@@ -34,6 +39,8 @@ class ServingGateway:
         self._stop = threading.Event()
         self.steps = 0
         engine.register("gen.submit", self._submit)
+        engine.register("gen.submit_bulk", self._submit_bulk,
+                        pass_handle=True)
         engine.register("gen.result", self._result)
         engine.register("gen.generate", self._generate)
         engine.register("gen.stats", self._stats)
@@ -54,6 +61,27 @@ class ServingGateway:
 
     def _submit(self, req_in):
         return {"rid": self._enqueue(req_in).rid}
+
+    def _submit_bulk(self, req_in, handle):
+        """Zero-copy submit: pull the prompt from the caller's registered
+        memory (cheapest-tier transport chosen by address resolution)."""
+        desc = BulkDescriptor.from_bytes(req_in["desc"])
+        count = int(req_in.get("count", desc.size // 4))
+        # count and the descriptor are client-controlled: never allocate
+        # more than the descriptor can actually back
+        if count < 0 or count * 4 > desc.size:
+            raise ValueError(f"count {count} exceeds descriptor "
+                             f"({desc.size} bytes)")
+        tokens = np.empty(count, np.int32)
+        lh = self.engine.expose([tokens])
+        try:
+            self.engine.pull(handle.info.addr, desc, lh,
+                             size=count * 4)
+        finally:
+            lh.free()
+        req_in = dict(req_in, tokens=tokens)
+        out = {"rid": self._enqueue(req_in).rid}
+        handle.respond(out)
 
     def _result(self, req_in):
         rid = int(req_in["rid"])
@@ -79,9 +107,9 @@ class ServingGateway:
                 "done": req.done_event.is_set()}
 
     def _stats(self, _req):
-        active = sum(1 for r in self.serve.slot_req if r is not None)
-        return {"active_slots": active, "n_slots": self.serve.n_slots,
-                "queued": self.serve.queue.qsize(), "steps": self.steps}
+        out = self.serve.stats()
+        out.update(steps=self.steps, uris=self.engine.uri)
+        return out
 
     def _loop(self):
         while not self._stop.is_set():

@@ -26,3 +26,88 @@ def cases(n: int = 25, seed: int = 0):
 def draw_shape(rng, ndim_range=(1, 3), dim_range=(1, 17)):
     nd = int(rng.integers(*ndim_range))
     return tuple(int(rng.integers(*dim_range)) for _ in range(nd))
+
+
+# ---------------------------------------------------------------------------
+# Value generators (the hypothesis `st.recursive(...)` equivalents) for the
+# proc/bulk wire-format properties.
+# ---------------------------------------------------------------------------
+_DTYPES = ["float32", "float64", "int8", "int16", "int32", "int64",
+           "uint8", "uint16", "bool"]
+
+
+def draw_ndarray(rng, max_dim=9):
+    dt = np.dtype(str(rng.choice(_DTYPES)))
+    shape = draw_shape(rng, (1, 4), (1, max_dim))
+    if dt == np.bool_:
+        return rng.integers(0, 2, size=shape).astype(bool)
+    if dt.kind in "iu":
+        info = np.iinfo(dt)
+        return rng.integers(info.min, int(info.max) + 1, size=shape,
+                            dtype=np.int64).astype(dt)
+    return rng.standard_normal(shape).astype(dt)
+
+
+def draw_any_value(rng, depth=3):
+    """Arbitrary proc_any-compatible value: scalars, bytes/str, ndarrays,
+    and nested list/tuple/dict containers."""
+    atoms = ["none", "bool", "int", "float", "str", "bytes", "ndarray"]
+    kinds = atoms + (["list", "tuple", "dict"] if depth > 0 else [])
+    k = str(rng.choice(kinds))
+    if k == "none":
+        return None
+    if k == "bool":
+        return bool(rng.integers(2))
+    if k == "int":
+        return int(rng.integers(-2**62, 2**62))
+    if k == "float":
+        return float(rng.standard_normal())
+    if k == "str":
+        return "".join(chr(int(c)) for c in
+                       rng.integers(32, 0x2FA0, size=int(rng.integers(0, 12))))
+    if k == "bytes":
+        return bytes(rng.integers(0, 256, size=int(rng.integers(0, 16)),
+                                  dtype=np.uint8))
+    if k == "ndarray":
+        return draw_ndarray(rng)
+    n = int(rng.integers(0, 4))
+    if k == "list":
+        return [draw_any_value(rng, depth - 1) for _ in range(n)]
+    if k == "tuple":
+        return tuple(draw_any_value(rng, depth - 1) for _ in range(n))
+    return {f"k{i}": draw_any_value(rng, depth - 1) for i in range(n)}
+
+
+def values_equal(a, b) -> bool:
+    """Deep equality that treats ndarrays by content."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.dtype == b.dtype and a.shape == b.shape
+                and np.array_equal(a, b))
+    if isinstance(a, (list, tuple)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(values_equal(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(values_equal(a[k], b[k]) for k in a))
+    return type(a) is type(b) and a == b
+
+
+def draw_descriptor(rng):
+    """Random BulkDescriptor (import deferred: repro on sys.path at test
+    time via conftest)."""
+    from repro.core.bulk import BulkDescriptor, BulkSegment
+    nseg = int(rng.integers(1, 6))
+    segs = [BulkSegment(key=int(rng.integers(1, 2**63)),
+                        size=int(rng.integers(0, 2**40)))
+            for _ in range(nseg)]
+    scheme = str(rng.choice(["self", "sm", "tcp"]))
+    uri = f"{scheme}://node-{int(rng.integers(1e6))}"
+    return BulkDescriptor(uri, segs, bool(rng.integers(2)),
+                          bool(rng.integers(2)))
+
+
+def draw_truncation(rng, data: bytes) -> bytes:
+    """A strict prefix of ``data`` (decoders must reject, never read OOB)."""
+    assert len(data) > 0
+    return bytes(data[:int(rng.integers(0, len(data)))])

@@ -7,7 +7,7 @@ from repro.core.bulk import BulkDescriptor, BulkOpType
 from repro.core.executor import Engine
 from repro.core.types import MercuryError
 
-from proptest import cases
+from proptest import cases, draw_descriptor, draw_truncation
 
 
 @pytest.fixture
@@ -77,3 +77,38 @@ def test_pipelined_chunks_complete(pair):
     hb = b.expose([dst])
     b.pull(a.uri, ha.descriptor(), hb, chunk_size=64 * 1024, max_inflight=8)
     np.testing.assert_array_equal(dst, src)
+
+
+# ---------------------------------------------------------------------------
+# Descriptor wire-format properties (Hypothesis-style, see proptest.py)
+# ---------------------------------------------------------------------------
+@cases(80)
+def test_descriptor_roundtrip_property(rng):
+    """∀ descriptors: from_bytes(to_bytes(d)) preserves every field."""
+    d = draw_descriptor(rng)
+    d2 = BulkDescriptor.from_bytes(d.to_bytes())
+    assert d2.owner_uri == d.owner_uri
+    assert d2.read_allowed == d.read_allowed
+    assert d2.write_allowed == d.write_allowed
+    assert [(s.key, s.size) for s in d2.segments] == \
+        [(s.key, s.size) for s in d.segments]
+    assert d2.size == d.size
+
+
+@cases(80)
+def test_descriptor_truncated_raises(rng):
+    """∀ strict prefixes of a descriptor encoding: from_bytes must raise
+    (struct underflow), never return a silently mangled descriptor."""
+    import struct as _struct
+    d = draw_descriptor(rng)
+    data = d.to_bytes()
+    cut = draw_truncation(rng, data)
+    if len(cut) == len(data):
+        return
+    with pytest.raises((MercuryError, _struct.error, ValueError)):
+        BulkDescriptor.from_bytes(cut)
+
+
+def test_descriptor_accepts_memoryview():
+    d = BulkDescriptor("tcp://h:1", [])
+    assert BulkDescriptor.from_bytes(memoryview(d.to_bytes())).segments == []

@@ -14,8 +14,8 @@ from proptest import cases
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
     """AbstractMesh: enough for spec resolution without devices."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes)
+    from repro.distrib.sharding import abstract_mesh
+    return abstract_mesh(shape, axes)
 
 
 def test_spec_resolution_basics():

@@ -9,7 +9,8 @@ import pytest
 from repro.core import proc
 from repro.core.types import MercuryError
 
-from proptest import cases, draw_shape
+from proptest import (cases, draw_any_value, draw_ndarray, draw_shape,
+                      draw_truncation, values_equal)
 
 
 def roundtrip(p, v):
@@ -98,3 +99,75 @@ def test_zero_copy_decode_views_buffer():
     data = proc.encode(proc.proc_ndarray, a)
     out = proc.decode(proc.proc_ndarray, data)
     assert not out.flags["OWNDATA"]          # view into the message buffer
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-style properties (seeded-random fallback, see proptest.py)
+# ---------------------------------------------------------------------------
+@cases(60)
+def test_any_roundtrip_arbitrary_values(rng):
+    """∀ v drawn from the proc_any domain: decode(encode(v)) == v."""
+    v = draw_any_value(rng)
+    assert values_equal(roundtrip(proc.proc_any, v), v), v
+
+
+@cases(60)
+def test_any_decode_consumes_exactly(rng):
+    """Encoding is self-delimiting: a decode must consume every byte."""
+    data = proc.encode(proc.proc_any, draw_any_value(rng))
+    buf = proc.ProcBuf(encoding=False, data=data)
+    proc.proc_any(buf)
+    assert buf.done(), "trailing bytes after decode"
+
+
+@cases(60)
+def test_any_truncated_raises_or_shrinks(rng):
+    """∀ strict prefix of an encoding: decoding must raise MercuryError —
+    never crash, never read out of bounds.  (A prefix may also decode to a
+    *different* valid value when the cut lands on a value boundary of a
+    container; it must never equal the original.)"""
+    v = draw_any_value(rng)
+    data = proc.encode(proc.proc_any, v)
+    if not data:
+        return
+    cut = draw_truncation(rng, data)
+    if len(cut) == len(data):
+        return
+    try:
+        out = proc.decode(proc.proc_any, cut)
+    except MercuryError:
+        return
+    assert not values_equal(out, v)
+
+
+@cases(40)
+def test_ndarray_truncated_raises(rng):
+    a = draw_ndarray(rng)
+    data = proc.encode(proc.proc_ndarray, a)
+    cut = draw_truncation(rng, data)
+    if len(cut) >= len(data):
+        return
+    with pytest.raises(MercuryError):
+        arr = proc.decode(proc.proc_ndarray, cut)
+        # the payload bytes sit at the tail, so any strict prefix of a
+        # non-empty array body must underflow on p.read
+        if arr.nbytes == a.nbytes:
+            raise MercuryError(0, "decoded full array from a prefix")
+
+
+@cases(40)
+def test_scalar_procs_reject_truncation(rng):
+    encoders = [(proc.proc_varint, int(rng.integers(128, 2**62))),
+                (proc.proc_int64, int(rng.integers(-2**63, 2**63 - 1))),
+                (proc.proc_float64, float(rng.standard_normal())),
+                (proc.proc_str, "truncate-me-" + "x" * int(rng.integers(1, 9))),
+                (proc.proc_bytes, b"\x01\x02\x03\x04\x05")]
+    p, v = encoders[int(rng.integers(len(encoders)))]
+    data = proc.encode(p, v)
+    cut = draw_truncation(rng, data)
+    if len(cut) == len(data):
+        return
+    with pytest.raises(MercuryError):
+        out = proc.decode(p, cut)
+        if out == v:                 # a shorter varint prefix may decode;
+            raise MercuryError(0, "")  # equality from a prefix is the bug

@@ -10,11 +10,17 @@ from repro.core.executor import Engine, RemoteError
 from repro.core.types import Ret
 
 
-@pytest.fixture(params=["self", "tcp"])
+@pytest.fixture(params=["self", "tcp", "sm"])
 def engines(request):
     if request.param == "self":
         with Engine(None) as e:
             yield e, e
+    elif request.param == "sm":
+        import uuid
+        tag = uuid.uuid4().hex[:8]
+        with Engine(f"sm://rpc-a-{tag}") as a, \
+                Engine(f"sm://rpc-b-{tag}") as b:
+            yield a, b
     else:
         with Engine("tcp://127.0.0.1:0") as a, \
                 Engine("tcp://127.0.0.1:0") as b:

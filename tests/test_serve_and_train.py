@@ -63,6 +63,31 @@ def test_gateway_tcp_end_to_end(model_and_params):
         gw.stop()
 
 
+def test_gateway_sm_bulk_submit(model_and_params):
+    """Gateway over the shared-memory tier: the prompt never rides the
+    eager message — the gateway pulls it from the client's registered
+    memory (gen.submit_bulk)."""
+    import uuid
+    m, params = model_and_params
+    tag = uuid.uuid4().hex[:8]
+    with Engine(f"sm://gw-{tag}") as srv, Engine(f"sm://gwc-{tag}") as cli:
+        gw = ServingGateway(srv, ServeEngine(m, params, max_len=64,
+                                             n_slots=2))
+        tokens = np.asarray([1, 2, 3], np.int32)
+        h = cli.expose([tokens])
+        out = cli.call(srv.uri, "gen.submit_bulk",
+                       {"desc": h.descriptor().to_bytes(), "count": 3,
+                        "max_new": 4}, timeout=120.0)
+        res = cli.call(srv.uri, "gen.result",
+                       {"rid": out["rid"], "wait": True, "timeout": 60.0},
+                       timeout=120.0)
+        h.free()
+        assert res["done"] and len(res["tokens"]) == 4
+        stats = cli.call(srv.uri, "gen.stats", {})
+        assert "sm://" in stats["uris"]
+        gw.stop()
+
+
 def make_batch(step):
     k = jax.random.PRNGKey(step)
     toks = jax.random.randint(k, (4, 33), 0, CFG.vocab)

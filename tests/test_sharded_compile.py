@@ -115,8 +115,8 @@ def test_sharded_train_and_decode():
 
 def test_production_mesh_shapes():
     # AbstractMesh mirrors make_production_mesh without touching devices
-    from jax.sharding import AbstractMesh
-    single = AbstractMesh((16, 16), ("data", "model"))
-    multi = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    from repro.distrib.sharding import abstract_mesh
+    single = abstract_mesh((16, 16), ("data", "model"))
+    multi = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert single.size == 256 and multi.size == 512
     assert tuple(multi.axis_names) == ("pod", "data", "model")

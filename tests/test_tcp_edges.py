@@ -1,0 +1,153 @@
+"""tcp plugin edge cases: partial/dribbled socket reads, peer disconnect
+mid-RPC, and cancellation of in-flight expected receives — the failure
+paths a real DCN transport hits that the happy-path suites never touch."""
+import socket
+import struct
+import time
+
+import pytest
+
+from repro.core.executor import Engine, RemoteError
+from repro.core.na import TCPPlugin
+from repro.core.types import Ret
+
+_FRAME_HDR = struct.Struct("<IB")
+_TAG = struct.Struct("<Q")
+K_HELLO = 0
+K_UNEXP = 1
+
+
+def spin(plugins, cond, timeout=10.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        for p in plugins:
+            p.progress(0.005)
+    assert cond(), "condition not met within timeout"
+
+
+def _frames(kind: int, payload: bytes) -> bytes:
+    return _FRAME_HDR.pack(len(payload) + 1, kind) + payload
+
+
+def test_partial_socket_reads():
+    """A frame dribbled in 1-byte chunks must still assemble correctly."""
+    p = TCPPlugin(None, listen=True)
+    try:
+        host, port = p.addr_self().uri[len("tcp://"):].rsplit(":", 1)
+        got = {}
+        p.msg_recv_unexpected(
+            lambda ret, src, tag, data: got.update(tag=tag, data=bytes(data)))
+
+        s = socket.create_connection((host, int(port)))
+        wire = _frames(K_HELLO, b"tcp://1.2.3.4:9") + \
+            _frames(K_UNEXP, _TAG.pack(42) + b"dribbled-payload")
+        for i in range(len(wire)):           # one byte at a time
+            s.sendall(wire[i:i + 1])
+            p.progress(0.001)
+        spin([p], lambda: "data" in got)
+        assert got["tag"] == 42 and got["data"] == b"dribbled-payload"
+        s.close()
+    finally:
+        p.finalize()
+
+
+def test_partial_frame_then_disconnect():
+    """A connection dying mid-frame must not crash or deliver garbage."""
+    p = TCPPlugin(None, listen=True)
+    try:
+        host, port = p.addr_self().uri[len("tcp://"):].rsplit(":", 1)
+        got = []
+        p.msg_recv_unexpected(lambda ret, src, tag, data: got.append(data))
+
+        s = socket.create_connection((host, int(port)))
+        full = _frames(K_UNEXP, _TAG.pack(1) + b"never-completes")
+        s.sendall(full[:len(full) // 2])     # half a frame, then vanish
+        for _ in range(10):
+            p.progress(0.005)
+        s.close()
+        for _ in range(10):
+            p.progress(0.005)
+        assert got == []
+    finally:
+        p.finalize()
+
+
+def test_oversized_frame_disconnects_peer():
+    """A frame header advertising > MAX_FRAME is a protocol error: the
+    connection is dropped rather than the buffer allocated."""
+    from repro.core.na.tcp import MAX_FRAME
+    p = TCPPlugin(None, listen=True)
+    try:
+        host, port = p.addr_self().uri[len("tcp://"):].rsplit(":", 1)
+        s = socket.create_connection((host, int(port)))
+        s.sendall(_FRAME_HDR.pack(MAX_FRAME + 1, K_UNEXP))
+        deadline = time.time() + 5
+        closed = False
+        while time.time() < deadline and not closed:
+            p.progress(0.01)
+            try:
+                s.settimeout(0.05)
+                if s.recv(4096) == b"":
+                    closed = True
+            except socket.timeout:
+                pass
+            except OSError:
+                closed = True
+        assert closed
+    finally:
+        p.finalize()
+
+
+def test_peer_disconnect_mid_rpc():
+    """Server dies between request and response: the origin's pre-posted
+    expected recv must fail with DISCONNECT, not hang until timeout."""
+    srv = Engine("tcp://127.0.0.1:0")
+    cli = Engine("tcp://127.0.0.1:0")
+    try:
+        import threading
+        started = threading.Event()
+
+        def stall(_x):
+            started.set()
+            time.sleep(30)           # never responds in time
+            return None
+
+        srv.register("stall", stall)
+        fut = cli.call_async(srv.uri, "stall", None, timeout=25.0)
+        assert started.wait(10.0)
+        t0 = time.time()
+        srv.shutdown()               # closes the connection mid-RPC
+        with pytest.raises(RemoteError) as ei:
+            fut.result(timeout=20.0)
+        assert ei.value.ret == Ret.DISCONNECT
+        assert time.time() - t0 < 10.0   # failed fast, not via timeout
+    finally:
+        cli.shutdown()
+        srv.shutdown()
+
+
+def test_cancel_inflight_expected_recv():
+    """Cancel an armed expected recv while its message is in flight: the
+    callback must not fire, and a later recv for the same tag still can."""
+    a = TCPPlugin(None, listen=True)
+    b = TCPPlugin(None, listen=True)
+    try:
+        addr_a = b.addr_lookup(a.addr_self().uri)
+        addr_b = a.addr_lookup(b.addr_self().uri)
+        fired = []
+        op = b.msg_recv_expected(addr_a, 5, lambda *args: fired.append(args))
+        for _ in range(5):           # let the post land in the progress loop
+            b.progress(0.005)
+        b.cancel(op)
+        a.msg_send_expected(addr_b, b"in-flight", 5, lambda ret: None)
+        for _ in range(20):
+            a.progress(0.005)
+            b.progress(0.005)
+        assert not fired and op.canceled
+        got = {}
+        b.msg_recv_expected(None, 5, lambda ret, data: got.update(d=bytes(data)))
+        spin([a, b], lambda: "d" in got)
+        assert got["d"] == b"in-flight"
+    finally:
+        a.finalize()
+        b.finalize()
