@@ -4,7 +4,10 @@
    (paper claim: the RPC layer adds small, flat overhead);
 2. bulk transfer bandwidth vs size, eager vs rendezvous crossover and
    pipelining depth (paper claim: bulk approaches raw bandwidth);
-3. RPC rate vs in-flight concurrency (the callback/CQ model's point).
+3. RPC rate vs in-flight concurrency (the callback/CQ model's point);
+4. routed-pool throughput: 1 client fanned across 3 service replicas
+   (sm+tcp mix) through the fabric's ServicePool vs the same load on a
+   single endpoint — the scale-out win is measured, not asserted.
 """
 from __future__ import annotations
 
@@ -259,6 +262,113 @@ def bench_bandwidth(sizes=(4 << 10, 64 << 10, 1 << 20, 16 << 20, 64 << 20),
     return out
 
 
+_POOL_WORKER_SRC = textwrap.dedent("""
+    import sys, time
+    sys.path.insert(0, sys.argv[1])
+    from repro.core.executor import Engine
+    from repro.fabric import ServiceInstance
+    uris = sys.argv[2].split(";")
+    registry, work_ms = sys.argv[3], float(sys.argv[4])
+    # 2 handler threads/worker: the benchmark contrasts handler *capacity*
+    # (1 endpoint = 2 concurrent handlers vs pool = 2 x n_workers), keeping
+    # both sides far below the client's noisy per-RPC ceiling on tiny boxes
+    with Engine(uris, handler_threads=2) as e:
+        e.register("work", lambda x: time.sleep(work_ms / 1e3) or x)
+        inst = ServiceInstance(e, registry, "bench-pool", capacity=4,
+                               report_interval=0.2)
+        print("URI " + e.uri, flush=True)
+        sys.stdin.read()
+        inst.close()
+""")
+
+
+def _drive(call_one, n_calls: int, concurrency: int) -> float:
+    """Issue ``n_calls`` blocking calls from ``concurrency`` threads;
+    returns calls/second."""
+    import concurrent.futures as cf
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(concurrency) as tp:
+        futs = [tp.submit(call_one, i) for i in range(n_calls)]
+        for f in futs:
+            f.result(timeout=120)
+    return n_calls / (time.perf_counter() - t0)
+
+
+def bench_pool(n_workers: int = 3, work_ms: float = 40.0,
+               n_calls: int = 300, concurrency: int = 12) -> Dict:
+    # work_ms is deliberately large relative to per-RPC client overhead:
+    # the benchmark measures *handler-capacity* scale-out (what replicas
+    # add), and must stay >=1.5x even when scheduling noise on a small
+    # CI box doubles the client-side cost of each call.
+    """Routed-pool throughput: the same workload against one endpoint vs
+    fanned across ``n_workers`` replicas by a ServicePool (locality
+    balancer, sm+tcp mix: workers 0..n-2 are reachable over shared
+    memory, the last only over tcp)."""
+    from contextlib import ExitStack
+
+    from repro.fabric import RegistryService, RetryPolicy, ServicePool
+
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    out: Dict = {"name": "routed_pool", "workers": n_workers,
+                 "work_ms": work_ms, "calls": n_calls,
+                 "concurrency": concurrency}
+    tag = uuid.uuid4().hex[:8]
+    with Engine("tcp://127.0.0.1:0") as reg_engine:
+        registry = RegistryService(reg_engine, instance_ttl=5.0)
+        with ExitStack() as stack:
+            worker_uris = []
+            for i in range(n_workers):
+                uri = (f"sm://bpw{i}-{tag};tcp://127.0.0.1:0"
+                       if i < n_workers - 1 else "tcp://127.0.0.1:0")
+                p = subprocess.Popen(
+                    [sys.executable, "-c", _POOL_WORKER_SRC, src, uri,
+                     reg_engine.uri, str(work_ms)],
+                    stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True)
+
+                def _stop(proc=p):
+                    try:
+                        proc.stdin.close()
+                        proc.wait(timeout=10)
+                    except Exception:
+                        proc.kill()
+                stack.callback(_stop)
+                line = p.stdout.readline().strip()
+                if not line.startswith("URI "):
+                    raise RuntimeError(f"pool worker failed: {line!r}")
+                worker_uris.append(line[4:])
+
+            with Engine([f"sm://bpc-{tag}", "tcp://127.0.0.1:0"]) as cli:
+                payload = b"x" * 64
+                # baseline: every call to ONE endpoint (worker 0)
+                single = worker_uris[0]
+                cli.call(single, "work", payload)            # warm
+                out["single_rps"] = _drive(
+                    lambda i: cli.call(single, "work", payload, timeout=30),
+                    n_calls, concurrency)
+
+                # credits sized so the locality balancer overflows past
+                # the sm tier onto the tcp replica once sm saturates —
+                # the mixed-tier routing the benchmark is about
+                pool = ServicePool(cli, reg_engine.uri, "bench-pool",
+                                   balancer="locality",
+                                   credits_per_target=max(concurrency //
+                                                          n_workers, 2),
+                                   policy=RetryPolicy(attempts=3,
+                                                      rpc_timeout=30.0))
+                pool.call("work", payload)                   # warm
+                out["pool_rps"] = _drive(
+                    lambda i: pool.call("work", payload, timeout=30),
+                    n_calls, concurrency)
+                st = pool.stats()
+                out["pool_tiers"] = sorted(r["tier"]
+                                           for r in st["replicas"])
+                out["pool_calls_per_replica"] = sorted(
+                    r["calls"] for r in st["replicas"])
+        registry.close()
+    out["speedup_vs_single"] = out["pool_rps"] / max(out["single_rps"], 1e-9)
+    return out
+
+
 def bench_rate(inflight_levels=(1, 2, 8, 32, 128)) -> Dict:
     """Small-RPC throughput vs number of in-flight requests."""
     out: Dict = {"name": "rpc_rate", "points": []}
@@ -299,6 +409,7 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
             results.append(bench_bandwidth(sizes=sizes, transport=t))
     if not smoke:
         results.append(bench_rate())
+    results.append(bench_pool(n_calls=150 if smoke else 450))
     if verbose:
         lat = results[0]
         parts = [f"raw tcp rtt {lat['raw_tcp_rtt_us']:.0f}us"]
@@ -322,19 +433,37 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                 else:
                     print(f"   {p['size'] >> 10:8d}KiB eager              "
                           f"{p['MBps']:8.0f}")
-        if results[-1]["name"] == "rpc_rate":
-            print("[rate] inflight -> req/s")
-            for p in results[-1]["points"]:
-                print(f"   {p['inflight']:4d} -> {p['rps']:7.0f}")
+        for res in results:
+            if res["name"] == "rpc_rate":
+                print("[rate] inflight -> req/s")
+                for p in res["points"]:
+                    print(f"   {p['inflight']:4d} -> {p['rps']:7.0f}")
+            if res["name"] == "routed_pool":
+                print(f"[pool] 1 client -> {res['workers']} replicas "
+                      f"(tiers {res.get('pool_tiers')}), "
+                      f"{res['work_ms']:.0f}ms/handler, "
+                      f"{res['concurrency']} in flight:")
+                print(f"   single endpoint {res['single_rps']:7.0f} rps | "
+                      f"routed pool {res['pool_rps']:7.0f} rps | "
+                      f"{res['speedup_vs_single']:.2f}x  "
+                      f"(calls/replica {res['pool_calls_per_replica']})")
     return results
 
 
 if __name__ == "__main__":
     import argparse
+    import json
     ap = argparse.ArgumentParser(description="Mercury core microbenchmarks")
     ap.add_argument("--transports", default="self,sm,tcp",
                     help="comma-separated subset of self,sm,tcp")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced iterations/sizes (CI)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write results as JSON (CI perf artifact)")
     args = ap.parse_args()
-    run_all(transports=tuple(args.transports.split(",")), smoke=args.smoke)
+    res = run_all(transports=tuple(args.transports.split(",")),
+                  smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"[json] wrote {args.json}")

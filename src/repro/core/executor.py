@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
+import time
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import numpy as np
@@ -37,6 +38,20 @@ class RemoteError(MercuryError):
     def __init__(self, ret: Ret, detail: str = ""):
         super().__init__(ret, detail)
         self.detail = detail
+
+
+class CallFuture(cf.Future):
+    """Future returned by :meth:`Engine.call_async`; carries the underlying
+    RPC handle so callers (hedged requests, pools) can abandon the call."""
+
+    handle: Optional[Handle] = None
+
+    def cancel_call(self) -> None:
+        """Cancel the in-flight RPC; the future resolves with a
+        ``Ret.CANCELED`` :class:`RemoteError` (unless the response won the
+        race, in which case the result stands)."""
+        if self.handle is not None:
+            self.handle.cancel()
 
 
 class Engine:
@@ -119,7 +134,7 @@ class Engine:
                     value = handle.get_input()
                     if pass_handle:
                         out = fn(value, handle)
-                        if handle.responded or no_response:
+                        if handle.responded or handle.deferred or no_response:
                             return
                     else:
                         out = fn(value)
@@ -153,12 +168,26 @@ class Engine:
             self.hg.register(name)
 
     def call_async(self, target: str | NAAddress, name: str, arg: Any = None,
-                   timeout: Optional[float] = 30.0) -> cf.Future:
-        """Post an RPC; resolve a Future with the decoded output."""
+                   timeout: Optional[float] = 30.0,
+                   deadline: Optional[float] = None) -> CallFuture:
+        """Post an RPC; resolve a Future with the decoded output.
+
+        ``deadline`` (absolute ``time.monotonic()`` value) overrides
+        ``timeout``: the transport timeout becomes the time remaining, and
+        an already-expired deadline fails fast without touching the wire.
+        The returned :class:`CallFuture` supports ``cancel_call()``.
+        """
+        fut = CallFuture()
+        if deadline is not None:
+            timeout = deadline - time.monotonic()
+            if timeout <= 0:
+                fut.set_exception(RemoteError(Ret.TIMEOUT,
+                                              f"{name}: deadline expired"))
+                return fut
         self._ensure_registered(name)
         addr = self.lookup(target) if isinstance(target, str) else target
         handle = self.hg.create(addr, name)
-        fut: cf.Future = cf.Future()
+        fut.handle = handle
 
         def on_complete(info: CallbackInfo):
             h: Handle = info.handle
@@ -173,8 +202,15 @@ class Engine:
         return fut
 
     def call(self, target: str | NAAddress, name: str, arg: Any = None,
-             timeout: Optional[float] = 30.0) -> Any:
+             timeout: Optional[float] = 30.0,
+             deadline: Optional[float] = None) -> Any:
         """Blocking request-model shim (post/wait)."""
+        if deadline is not None:
+            # pass through: an already-expired deadline fails fast inside
+            # call_async without putting the request on the wire
+            fut = self.call_async(target, name, arg, deadline=deadline)
+            grace = max(deadline - time.monotonic(), 0.0) + 5.0
+            return fut.result(timeout=grace)
         fut = self.call_async(target, name, arg, timeout=timeout)
         # +grace so transport-level timeout fires first with a precise code
         return fut.result(timeout=None if timeout is None else timeout + 5.0)

@@ -73,9 +73,13 @@ class Handle:
         self._payload_staged = None     # shm staging buffer (sm rendezvous)
         self._deadline_entry: Optional[dict] = None
         self._recv_op = None
+        self._complete: Optional[Callable[..., None]] = None
         self._completed = False
         self._lock = threading.Lock()
         self.responded = False
+        # target side: a pass_handle handler sets this before returning to
+        # take ownership of responding later (event-driven response)
+        self.deferred = False
 
     def _release_payload(self) -> None:
         if self._payload_bulk is not None:
@@ -145,6 +149,8 @@ class Handle:
             ctx.completion_add(cb, CallbackInfo(OpType.FORWARD, ret,
                                                 handle=self, arg=arg))
 
+        self._complete = complete
+
         if not self.rpc.no_response:
             def on_response(ret: Ret, data: memoryview):
                 if ret != Ret.SUCCESS:
@@ -192,11 +198,17 @@ class Handle:
         hg.na.msg_send_unexpected(self.info.addr, msg, self.cookie, on_sent)
 
     def cancel(self) -> None:
+        """Cancel an in-flight forward.  The forward's completion callback
+        fires with ``Ret.CANCELED`` (exactly once — a response racing the
+        cancel wins whichever grabs the completion lock first), so futures
+        layered on top always resolve; this is what lets hedged requests
+        abandon the loser."""
         if self._recv_op is not None:
             self.hg.na.cancel(self._recv_op)
-
-        def already(ret, output=None):
-            pass
+        if self._complete is not None:
+            self._complete(Ret.CANCELED)
+            return
+        # not forwarded yet: mark completed so a later forward is a no-op
         with self._lock:
             if self._completed:
                 return

@@ -1,0 +1,23 @@
+"""Service fabric (paper §"extreme-scale services"): registry-backed
+service pools with load-balanced, locality-aware routing, per-call
+deadlines/retries/hedging, and credit-based flow control.
+
+See DESIGN.md §7 for the registry schema, the balancer contract and the
+credit/flow-control state machine.
+"""
+from .balancer import (BALANCERS, Balancer, LeastLoaded, LocalityAware,
+                       RoundRobin, make_balancer)
+from .flow import CreditGate
+from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
+                     NonRetryable, RetryPolicy, call_with_budget)
+from .pool import PoolError, Replica, ServicePool
+from .registry import (RegistryClient, RegistryService, ServiceInstance,
+                       resolve_service_uris)
+
+__all__ = [
+    "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
+    "make_balancer", "CreditGate", "RetryPolicy", "call_with_budget",
+    "FabricError", "DeadlineExceeded", "BudgetExhausted", "NonRetryable",
+    "ServicePool", "PoolError", "Replica", "RegistryService",
+    "RegistryClient", "ServiceInstance", "resolve_service_uris",
+]

@@ -1,0 +1,122 @@
+"""Pluggable load balancers for :class:`~repro.fabric.pool.ServicePool`.
+
+Contract (see DESIGN.md §7): a balancer is given the pool's live
+:class:`Replica` views and returns them **ordered best-first**.  The pool
+walks the ranking and places the call on the first replica that admits it
+(credit available / reachable); retries continue down the list.  Ranking
+instead of picking one replica is what lets flow control, retries and
+hedging compose with any policy: the balancer never needs to know why a
+candidate was rejected.
+
+Balancers must be cheap and thread-safe — they run on every call.
+
+  * ``rr``        round-robin over the replica set (stable under view
+                  refreshes: position keyed by a monotonically advancing
+                  counter, not list order)
+  * ``least``     least-loaded first, using piggybacked registry load
+                  reports combined with the pool's own live in-flight
+                  counts (local counts lead, reports trail)
+  * ``locality``  cheapest transport tier first (self < sm < tcp — the
+                  NotNets argument: keep co-located traffic off the
+                  network stack), least-loaded within a tier
+"""
+from __future__ import annotations
+
+import abc
+import itertools
+import threading
+from typing import Dict, List, Sequence, Type
+
+
+class Balancer(abc.ABC):
+    @abc.abstractmethod
+    def rank(self, replicas: Sequence["Replica"]) -> List["Replica"]:
+        """Return ``replicas`` ordered best-first (must not mutate)."""
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+
+class RoundRobin(Balancer):
+    def __init__(self):
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+
+    def rank(self, replicas):
+        if not replicas:
+            return []
+        with self._lock:
+            n = next(self._counter)
+        order = sorted(replicas, key=lambda r: r.iid)   # stable base order
+        k = n % len(order)
+        return order[k:] + order[:k]
+
+
+def _effective_load(r) -> float:
+    """Piggybacked registry load + what *we* currently have in flight
+    there (the local signal is fresher than the last report)."""
+    cap = max(r.capacity, 1)
+    return (r.load + r.gate.inflight) / cap
+
+
+def _rotate_ties(ordered: List["Replica"], keyfn, n: int) -> List["Replica"]:
+    """Rotate the leading equal-cost group by ``n`` so replicas that are
+    indistinguishable under ``keyfn`` share traffic instead of the
+    deterministic sort funnelling every idle-period call to one of them."""
+    if len(ordered) < 2:
+        return ordered
+    k0 = keyfn(ordered[0])
+    i = 1
+    while i < len(ordered) and keyfn(ordered[i]) == k0:
+        i += 1
+    k = n % i
+    return ordered[k:i] + ordered[:k] + ordered[i:]
+
+
+class LeastLoaded(Balancer):
+    def __init__(self):
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+
+    def rank(self, replicas):
+        key = _effective_load
+        base = sorted(replicas, key=lambda r: (key(r), r.iid))
+        with self._lock:
+            n = next(self._counter)
+        return _rotate_ties(base, key, n)
+
+
+class LocalityAware(Balancer):
+    """Prefer cheaper transport tiers; break ties by load.  A replica
+    whose cheap tier was demoted (stale sm segment, dead self peer)
+    naturally sinks in the ranking because its resolved tier rose."""
+
+    def __init__(self):
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+
+    def rank(self, replicas):
+        def key(r):
+            return (r.tier, _effective_load(r))
+        base = sorted(replicas, key=lambda r: (key(r), r.iid))
+        with self._lock:
+            n = next(self._counter)
+        return _rotate_ties(base, key, n)
+
+
+BALANCERS: Dict[str, Type[Balancer]] = {
+    "rr": RoundRobin,
+    "least": LeastLoaded,
+    "locality": LocalityAware,
+}
+
+
+def make_balancer(spec) -> Balancer:
+    if isinstance(spec, Balancer):
+        return spec
+    cls = BALANCERS.get(spec)
+    if cls is None:
+        raise ValueError(f"unknown balancer {spec!r}; "
+                         f"choose from {sorted(BALANCERS)}")
+    return cls()

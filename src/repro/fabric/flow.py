@@ -1,0 +1,100 @@
+"""Credit-based per-target flow control.
+
+Each replica a :class:`~repro.fabric.pool.ServicePool` talks to gets a
+:class:`CreditGate`: a fixed number of credits, one consumed per in-flight
+RPC and returned on completion (success, failure, or cancel).  A slow
+replica therefore saturates its credits and *sheds load into
+backpressure* — callers either wait (bounded by their deadline), route to
+another replica, or fail with a backpressure error — instead of queueing
+unboundedly inside the transport.  The gate's occupancy doubles as a
+live load signal for the balancers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict
+
+
+class CreditGate:
+    """A counting gate with wait-with-timeout and observable occupancy
+    (``threading.Semaphore`` hides its count, which the balancer needs)."""
+
+    def __init__(self, credits: int):
+        if credits < 1:
+            raise ValueError(f"credits must be >= 1, got {credits}")
+        self.credits = credits
+        self._avail = credits
+        self._waiting = 0
+        self._cv = threading.Condition()
+        # cumulative counters for pool stats
+        self.acquired_total = 0
+        self.backpressured_total = 0   # acquires that had to wait
+        self.rejected_total = 0        # acquires that timed out
+
+    # -- acquire / release ---------------------------------------------------
+    def try_acquire(self) -> bool:
+        with self._cv:
+            if self._avail <= 0:
+                return False
+            self._avail -= 1
+            self.acquired_total += 1
+            return True
+
+    def acquire(self, timeout: float) -> bool:
+        """Take a credit, waiting up to ``timeout`` seconds.  Returns False
+        on timeout (the caller should reroute or surface backpressure)."""
+        with self._cv:
+            if self._avail <= 0:
+                self.backpressured_total += 1
+                deadline = time.monotonic() + timeout
+                self._waiting += 1
+                try:
+                    while self._avail <= 0:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0 or not self._cv.wait(remaining):
+                            if self._avail > 0:
+                                break
+                            self.rejected_total += 1
+                            return False
+                finally:
+                    self._waiting -= 1
+            self._avail -= 1
+            self.acquired_total += 1
+            return True
+
+    def release(self) -> None:
+        with self._cv:
+            if self._avail >= self.credits:
+                raise RuntimeError("credit released more times than acquired")
+            self._avail += 1
+            self._cv.notify()
+
+    # -- observability -------------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        with self._cv:
+            return self.credits - self._avail
+
+    @property
+    def available(self) -> int:
+        with self._cv:
+            return self._avail
+
+    @property
+    def waiting(self) -> int:
+        with self._cv:
+            return self._waiting
+
+    def stats(self) -> Dict[str, int]:
+        with self._cv:
+            return {"credits": self.credits,
+                    "inflight": self.credits - self._avail,
+                    "waiting": self._waiting,
+                    "acquired": self.acquired_total,
+                    "backpressured": self.backpressured_total,
+                    "rejected": self.rejected_total}
+
+    def __repr__(self):
+        return (f"<CreditGate {self.credits - self._avail}"
+                f"/{self.credits} in flight>")

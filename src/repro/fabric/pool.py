@@ -1,0 +1,463 @@
+"""ServicePool — client-side routed calls to a named service.
+
+The pool resolves a service name through the registry to N live replicas
+and routes every call through a pluggable balancer, adding the
+reliability layer a single hard-coded URI cannot give:
+
+  * **cached views, refreshed by epoch** — a cheap ``fab.epoch`` poll
+    (rate-limited to ``refresh_interval``) detects membership changes;
+    the full ``fab.resolve`` only runs on an epoch bump or after a
+    failure, so the steady-state per-call overhead is zero RPCs;
+  * **locality-tiered resolution** — each replica's address set resolves
+    to the cheapest reachable transport (self > sm > tcp, via the same
+    tier order as ``na/multi.py``); a tier that fails at runtime (stale
+    sm segment after a replica restart) is **demoted** in the cached
+    view and the call transparently falls back to the next tier;
+  * **deadlines + budgeted retries + hedging** — every call runs under
+    :func:`~repro.fabric.policy.call_with_budget`; per-attempt transport
+    timeouts are clamped to the caller's deadline, retries use jittered
+    exponential backoff and count against a fixed attempt budget which
+    *includes* hedge requests, and the losing side of a hedge is
+    canceled at the transport;
+  * **credit-based flow control** — per-replica
+    :class:`~repro.fabric.flow.CreditGate`s bound in-flight requests so
+    a slow replica backpressures instead of queueing unboundedly, and
+    gate occupancy feeds back into the balancer's load signal.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.executor import CallFuture, Engine, RemoteError
+from ..core.na.base import SCHEME_TIERS
+from ..core.na.multi import scheme_of as _scheme
+from ..core.types import MercuryError, Ret
+from .balancer import Balancer, make_balancer
+from .flow import CreditGate
+from .policy import (BudgetExhausted, DeadlineExceeded, NonRetryable,
+                     RetryPolicy, call_with_budget)
+from .registry import RegistryClient
+
+# errors worth retrying on another replica: the request may never have
+# executed (or the transport lost the answer).  Application faults
+# (FAULT/NOENTRY/INVALID_ARG/...) are NOT retried: the handler ran.
+_RETRYABLE = {Ret.TIMEOUT, Ret.DISCONNECT, Ret.AGAIN, Ret.NOMEM,
+              Ret.CANCELED, Ret.PROTOCOL_ERROR, Ret.CHECKSUM_ERROR}
+# transport-level failures that indicate the *resolved tier* (not the
+# service) is bad — trigger tier demotion and a mark-down
+_TIER_FAULTS = {Ret.DISCONNECT, Ret.PROTOCOL_ERROR}
+
+
+class PoolError(MercuryError):
+    pass
+
+
+def _tier_sorted(uris: Sequence[str]) -> List[str]:
+    return sorted(uris, key=lambda u: SCHEME_TIERS.get(_scheme(u), 99))
+
+
+class Replica:
+    """The pool's cached view of one service instance: registry-reported
+    state + local routing state (resolved tier, credit gate, stats)."""
+
+    def __init__(self, iid: str, uris: Sequence[str], capacity: int,
+                 load: float, credits: int):
+        self.iid = iid
+        self.uris = _tier_sorted(uris)
+        self.capacity = capacity
+        self.load = load
+        self.gate = CreditGate(credits)
+        self.bad_schemes: set = set()      # demoted tiers (this pool only)
+        self.addr = None                   # resolved NAAddress
+        self.resolved_uri: Optional[str] = None
+        self.down_until = 0.0              # mark-down after hard failures
+        self.calls = 0
+        self.errors = 0
+        self.ema_latency = 0.0
+        self._lock = threading.Lock()
+
+    @property
+    def tier(self) -> int:
+        u = self.resolved_uri
+        return SCHEME_TIERS.get(_scheme(u), 99) if u else 99
+
+    def resolve(self, engine: Engine) -> bool:
+        """Resolve the cheapest non-demoted tier; False if unreachable."""
+        with self._lock:
+            for uri in self.uris:
+                if _scheme(uri) in self.bad_schemes:
+                    continue
+                try:
+                    self.addr = engine.lookup(uri)
+                    self.resolved_uri = uri
+                    return True
+                except MercuryError:
+                    continue
+            self.addr = None
+            self.resolved_uri = None
+            return False
+
+    def demote(self, engine: Engine) -> bool:
+        """Demote the currently resolved tier (it failed at runtime) and
+        re-resolve; True if a fallback tier exists."""
+        with self._lock:
+            if self.resolved_uri is None:
+                return False
+            self.bad_schemes.add(_scheme(self.resolved_uri))
+        return self.resolve(engine)
+
+    def reresolve(self, engine: Engine) -> bool:
+        """Forget demotions and resolve from scratch — the recovery path
+        for transient failures (a blip must not exclude a healthy replica
+        forever; a tier that is still broken just demotes again)."""
+        with self._lock:
+            self.bad_schemes.clear()
+        self.down_until = 0.0
+        return self.resolve(engine)
+
+    def mark_down(self, ttl: float) -> None:
+        self.down_until = time.monotonic() + ttl
+
+    @property
+    def is_up(self) -> bool:
+        return self.addr is not None and time.monotonic() >= self.down_until
+
+    def record(self, dt: Optional[float], ok: bool) -> None:
+        with self._lock:
+            self.calls += 1
+            if not ok:
+                self.errors += 1
+            elif dt is not None:
+                self.ema_latency = (0.2 * dt + 0.8 * self.ema_latency
+                                    if self.ema_latency else dt)
+
+    def stat(self) -> dict:
+        return {"iid": self.iid, "uri": self.resolved_uri,
+                "tier": _scheme(self.resolved_uri or "?"),
+                "capacity": self.capacity, "load": self.load,
+                "calls": self.calls, "errors": self.errors,
+                "ema_latency_ms": self.ema_latency * 1e3,
+                "up": self.is_up, **self.gate.stats()}
+
+
+class ServicePool:
+    """Resolve ``service`` via the registry and route calls across its
+    replicas.  Thread-safe: many caller threads may ``call`` at once."""
+
+    def __init__(self, engine: Engine, registry_uri: str, service: str,
+                 balancer: Balancer | str = "locality",
+                 policy: Optional[RetryPolicy] = None,
+                 credits_per_target: int = 8,
+                 refresh_interval: float = 0.25,
+                 default_timeout: float = 30.0,
+                 down_ttl: float = 2.0):
+        self.engine = engine
+        self.service = service
+        # short control-plane timeout: a dead registry must not stall the
+        # data path (stale cached views keep routing)
+        self.registry = RegistryClient(engine, registry_uri, timeout=2.0)
+        self.balancer = make_balancer(balancer)
+        self.policy = policy or RetryPolicy()
+        self.credits_per_target = credits_per_target
+        self.refresh_interval = refresh_interval
+        self.default_timeout = default_timeout
+        self.down_ttl = down_ttl
+        self._view: Dict[str, Replica] = {}
+        self._view_epoch = -1
+        self._next_epoch_check = 0.0
+        self._view_lock = threading.Lock()
+        self.refresh(force=True)
+
+    # -- view management -----------------------------------------------------
+    def refresh(self, force: bool = False) -> None:
+        """Bring the cached replica view up to date.  Rate-limited epoch
+        poll unless ``force``; full resolve only when the epoch moved."""
+        now = time.monotonic()
+        with self._view_lock:
+            if not force and now < self._next_epoch_check:
+                return
+            self._next_epoch_check = now + self.refresh_interval
+        try:
+            if not force:
+                # cheap poll first; resolve only when the epoch moved
+                if self.registry.epoch() == self._view_epoch:
+                    return
+            view = self.registry.resolve(self.service)
+        except MercuryError:
+            return                        # registry briefly unreachable
+        with self._view_lock:
+            if view["epoch"] < self._view_epoch:
+                return                    # raced a newer refresh: keep it
+            fresh: Dict[str, Replica] = {}
+            for inst in view["instances"]:
+                old = self._view.get(inst["iid"])
+                if old is not None:
+                    # keep gate/stats/demotions; update reported state
+                    old.capacity = inst["capacity"]
+                    old.load = inst["load"]
+                    new_uris = _tier_sorted(inst["uris"])
+                    if new_uris != old.uris:
+                        # instance re-registered on new addresses (e.g.
+                        # restarted on another port): demotions are stale
+                        old.uris = new_uris
+                        old.reresolve(self.engine)
+                    fresh[inst["iid"]] = old
+                else:
+                    rep = Replica(inst["iid"], inst["uris"],
+                                  inst["capacity"], inst["load"],
+                                  self.credits_per_target)
+                    rep.resolve(self.engine)
+                    fresh[inst["iid"]] = rep
+            self._view = fresh
+            self._view_epoch = view["epoch"]
+        # unreachable-at-creation replicas get another chance each refresh
+        for rep in fresh.values():
+            if rep.addr is None:
+                rep.reresolve(self.engine)
+
+    @property
+    def epoch(self) -> int:
+        return self._view_epoch
+
+    def replicas(self) -> List[Replica]:
+        with self._view_lock:
+            return list(self._view.values())
+
+    # -- call path -----------------------------------------------------------
+    def call(self, rpc: str, arg: Any = None,
+             timeout: Optional[float] = None,
+             deadline: Optional[float] = None,
+             policy: Optional[RetryPolicy] = None) -> Any:
+        """Routed, deadline-bounded, retried (and optionally hedged) call.
+
+        ``timeout`` is relative, ``deadline`` absolute (``monotonic``);
+        deadline wins if both are given.
+        """
+        return self._call(rpc, arg, timeout, deadline, policy, None)[0]
+
+    def call_routed(self, rpc: str, arg: Any = None,
+                    timeout: Optional[float] = None,
+                    deadline: Optional[float] = None,
+                    policy: Optional[RetryPolicy] = None) -> tuple:
+        """Like :meth:`call` but returns ``(value, iid)`` — the instance
+        that actually served the request.  Use with :meth:`call_on` for
+        replica-affine protocols (``gen.submit``'s rid only exists on the
+        replica that admitted it)."""
+        return self._call(rpc, arg, timeout, deadline, policy, None)
+
+    def call_on(self, iid: str, rpc: str, arg: Any = None,
+                timeout: Optional[float] = None,
+                deadline: Optional[float] = None,
+                policy: Optional[RetryPolicy] = None) -> Any:
+        """Pinned call: route only to instance ``iid`` (deadline/retry
+        budget still applies; no hedging to other replicas).  If the
+        instance left the view, the budget fails with
+        ``BudgetExhausted`` whose cause is ``PoolError(NOENTRY)`` —
+        retried rather than failed fast because a restarting instance
+        re-registers under its old iid."""
+        return self._call(rpc, arg, timeout, deadline, policy, iid)[0]
+
+    def _call(self, rpc: str, arg: Any, timeout: Optional[float],
+              deadline: Optional[float], policy: Optional[RetryPolicy],
+              only_iid: Optional[str]) -> tuple:
+        policy = policy or self.policy
+        if deadline is None:
+            deadline = time.monotonic() + (timeout if timeout is not None
+                                           else self.default_timeout)
+        state = {"issued": 0, "failed_iids": set(), "winner": None}
+
+        def attempt(idx: int, attempt_timeout: float) -> Any:
+            if state["issued"] >= policy.attempts:
+                # hedges consumed the remaining budget
+                raise NonRetryable(BudgetExhausted(
+                    f"{self.service}.{rpc}: attempt budget "
+                    f"({policy.attempts}) consumed by hedged requests"))
+            if idx > 0:
+                self.refresh(force=True)   # pick up epoch bumps fast
+            else:
+                self.refresh()
+            return self._attempt_once(rpc, arg, attempt_timeout, policy,
+                                      state, deadline, only_iid)
+
+        return call_with_budget(policy, deadline, attempt), state["winner"]
+
+    def _candidates(self, failed: set,
+                    only_iid: Optional[str] = None) -> List[Replica]:
+        reps = self.replicas()
+        if only_iid is not None:
+            reps = [r for r in reps if r.iid == only_iid]
+        ranked = self.balancer.rank([r for r in reps if r.is_up])
+        if not ranked and reps:
+            # nobody is up: recover from (possibly stale) demotions and
+            # mark-downs before declaring the service unreachable
+            ranked = self.balancer.rank(
+                [r for r in reps if r.reresolve(self.engine)])
+        pref = [r for r in ranked if r.iid not in failed]
+        return pref or ranked             # all failed once: try them again
+
+    def _attempt_once(self, rpc: str, arg: Any, attempt_timeout: float,
+                      policy: RetryPolicy, state: dict, deadline: float,
+                      only_iid: Optional[str] = None) -> Any:
+        t_start = time.monotonic()
+        # re-clamp to the caller's absolute deadline: the view refresh
+        # that ran before this attempt burned real time after
+        # attempt_timeout was computed
+        attempt_deadline = min(t_start + attempt_timeout, deadline)
+        candidates = self._candidates(state["failed_iids"], only_iid)
+        if not candidates:
+            raise PoolError(Ret.NOENTRY,
+                            f"no live replicas for {self.service!r}"
+                            + (f" (pinned to {only_iid})" if only_iid
+                               else ""))
+
+        primary = self._admit(candidates, attempt_deadline)
+        futs: List[CallFuture] = []
+        owners: List[Replica] = []
+        try:
+            try:
+                futs.append(self._issue(primary, rpc, arg, attempt_deadline,
+                                        state))
+            except MercuryError as e:
+                # sync failure (e.g. un-encodable arg -> INVALID_ARG) gets
+                # the same retryable/non-retryable classification as
+                # errors delivered through futures
+                self._note_failure(primary, e, state)
+                self._raise_attempt_error(e)
+            owners.append(primary)
+            return self._await(futs, owners, rpc, arg, candidates, policy,
+                               state, attempt_deadline, t_start)
+        finally:
+            for f in futs:
+                if not f.done():
+                    f.cancel_call()
+
+    def _admit(self, candidates: List[Replica], attempt_deadline: float
+               ) -> Replica:
+        """Find a replica with a free credit; if everyone is saturated,
+        wait (bounded) on the best-ranked gate — that wait *is* the
+        backpressure the flow control is for."""
+        for rep in candidates:
+            if rep.gate.try_acquire():
+                return rep
+        best = candidates[0]
+        wait = max(attempt_deadline - time.monotonic(), 0.0)
+        if not best.gate.acquire(wait):
+            raise PoolError(Ret.AGAIN,
+                            f"{self.service}: all replicas saturated "
+                            f"({best.gate.credits} credits each)")
+        return best
+
+    def _issue(self, rep: Replica, rpc: str, arg: Any,
+               attempt_deadline: float, state: dict) -> CallFuture:
+        """One wire RPC to one replica (credit already held); the credit
+        is returned when the future settles, whatever settles it."""
+        state["issued"] += 1
+        try:
+            fut = self.engine.call_async(rep.addr, rpc, arg,
+                                         deadline=attempt_deadline)
+        except BaseException:
+            rep.gate.release()        # sync failure (e.g. MSGSIZE)
+            raise
+        fut.add_done_callback(lambda _f: rep.gate.release())
+        return fut
+
+    def _await(self, futs: List[CallFuture], owners: List[Replica],
+               rpc: str, arg: Any, candidates: List[Replica],
+               policy: RetryPolicy, state: dict, attempt_deadline: float,
+               t_start: float) -> Any:
+        """Wait for the attempt's future(s); launch a hedge once the
+        hedge delay passes; first success wins and the loser is canceled."""
+        hedged = False
+        pending = list(futs)
+        while True:
+            now = time.monotonic()
+            remaining = attempt_deadline - now
+            if remaining <= 0 and pending:
+                raise RemoteError(Ret.TIMEOUT, f"{rpc}: attempt timed out")
+            wait_for = remaining
+            if (not hedged and policy.hedge_after is not None
+                    and state["issued"] < policy.attempts):
+                wait_for = min(wait_for,
+                               max(t_start + policy.hedge_after - now, 0.0))
+            done, not_done = cf.wait(pending, timeout=max(wait_for, 0.0),
+                                     return_when=cf.FIRST_COMPLETED)
+            for f in done:
+                pending.remove(f)
+                rep = owners[futs.index(f)]
+                err = f.exception()
+                if err is None:
+                    rep.record(time.monotonic() - t_start, ok=True)
+                    state["winner"] = rep.iid
+                    return f.result()
+                self._note_failure(rep, err, state)
+            if not pending and done:
+                # every issued future failed: surface the last error to
+                # the budget loop (retryable or not decided there)
+                self._raise_attempt_error(err)
+            if (not hedged and policy.hedge_after is not None
+                    and time.monotonic() - t_start >= policy.hedge_after
+                    and state["issued"] < policy.attempts):
+                hedged = True
+                hedge_rep = self._hedge_candidate(candidates, owners)
+                if hedge_rep is not None:
+                    futs.append(self._issue(hedge_rep, rpc, arg,
+                                            attempt_deadline, state))
+                    owners.append(hedge_rep)
+                    pending.append(futs[-1])
+            if not pending:
+                raise RemoteError(Ret.TIMEOUT, f"{rpc}: attempt timed out")
+
+    def _hedge_candidate(self, candidates: List[Replica],
+                         owners: List[Replica]) -> Optional[Replica]:
+        for rep in candidates:
+            if rep not in owners and rep.gate.try_acquire():
+                return rep
+        return None
+
+    def _note_failure(self, rep: Replica, err: BaseException,
+                      state: dict) -> None:
+        rep.record(None, ok=False)
+        state["failed_iids"].add(rep.iid)
+        ret = getattr(err, "ret", None)
+        if ret in _TIER_FAULTS:
+            # the resolved tier is broken (e.g. stale sm segment after a
+            # replica restart): demote it; no fallback tier -> mark down
+            if not rep.demote(self.engine):
+                rep.mark_down(self.down_ttl)
+        elif ret is not None and ret not in _RETRYABLE:
+            pass                          # application error: replica fine
+
+    @staticmethod
+    def _raise_attempt_error(err: BaseException) -> None:
+        ret = getattr(err, "ret", None)
+        if ret is not None and ret not in _RETRYABLE:
+            raise NonRetryable(err)
+        raise err
+
+    # -- conveniences --------------------------------------------------------
+    def call_each(self, rpc: str, arg: Any = None,
+                  timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Call every live replica once (admin/broadcast helper); returns
+        {iid: result-or-exception}."""
+        out: Dict[str, Any] = {}
+        for rep in self.replicas():
+            if not rep.is_up:
+                continue
+            try:
+                out[rep.iid] = self.engine.call(
+                    rep.addr, rpc, arg,
+                    timeout=timeout or self.default_timeout)
+            except Exception as e:        # noqa: BLE001 — broadcast survey
+                out[rep.iid] = e
+        return out
+
+    def stats(self) -> dict:
+        return {"service": self.service, "epoch": self._view_epoch,
+                "balancer": self.balancer.name,
+                "replicas": [r.stat() for r in self.replicas()]}
+
+    def close(self) -> None:
+        """The pool owns no threads; kept for symmetry with servers."""

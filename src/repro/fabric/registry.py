@@ -1,0 +1,272 @@
+"""Service registry — the fabric's name-resolution control plane.
+
+Instances of a named service register ``(service, address_set, capacity,
+load)``; clients resolve a service name to the live instance set.  A
+single monotonically increasing **epoch** covers the whole registry and
+bumps whenever *membership* of any service changes (register, deregister,
+expiry) — load reports deliberately do **not** bump it, so cached client
+views stay valid while load churns and are refreshed cheaply via the
+``fab.epoch`` poll.
+
+Liveness is layered on the membership service's machinery rather than
+reinvented: an instance's ``fab.report`` doubles as its heartbeat (TTL
+sweep shares the registry's own sweeper), and when the registry is given
+a :class:`~repro.services.membership.MembershipServer`, instances bound
+to a ``member_id`` are also reaped the moment the member expires.
+
+Wire schema (all values plain pytree-of-scalars — see DESIGN.md §7):
+
+  fab.register    {service, uris, capacity?, load?, iid?, member_id?}
+                  -> {iid, epoch}
+  fab.deregister  {service, iid} -> {ok, epoch}
+  fab.report      {service, iid, load} -> {epoch}          (heartbeat too)
+  fab.resolve     {service} -> {epoch, instances: [{iid, uris, capacity,
+                                                    load, age}]}
+  fab.services    {} -> {epoch, services: [name]}
+  fab.epoch       {} -> {epoch}
+"""
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.executor import Engine
+from ..core.na.multi import parse_addr_set
+from ..core.types import MercuryError, Ret
+
+
+class RegistryService:
+    """Hosts the ``fab.*`` RPCs on an engine (usually the same engine that
+    runs the :class:`MembershipServer` — one control-plane node)."""
+
+    def __init__(self, engine: Engine, membership=None,
+                 instance_ttl: float = 3.0, sweep_interval: float = 0.5):
+        self.engine = engine
+        self.ttl = instance_ttl
+        # (service, iid) -> {uris, capacity, load, member_id, last}
+        self.instances: Dict[Tuple[str, str], dict] = {}
+        self.epoch = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        engine.register("fab.register", self._register)
+        engine.register("fab.deregister", self._deregister)
+        engine.register("fab.report", self._report, inline=True)
+        engine.register("fab.resolve", self._resolve, inline=True)
+        engine.register("fab.services", self._services, inline=True)
+        engine.register("fab.epoch", self._epoch, inline=True)
+        if membership is not None:
+            # duck-typed MembershipServer: reap instances whose member died
+            membership.on_expire(self._members_expired)
+        self._sweeper = threading.Thread(
+            target=self._sweep_loop, args=(sweep_interval,), daemon=True,
+            name="fabric-registry-sweep")
+        self._sweeper.start()
+
+    # -- handlers ------------------------------------------------------------
+    def _register(self, req):
+        service = req["service"]
+        uris = req["uris"]
+        if isinstance(uris, str):
+            uris = parse_addr_set(uris)
+        iid = req.get("iid") or uuid.uuid4().hex[:12]
+        with self._lock:
+            self.instances[(service, iid)] = {
+                "uris": list(uris),
+                "capacity": int(req.get("capacity", 0)),
+                "load": float(req.get("load", 0.0)),
+                "member_id": req.get("member_id"),
+                "last": time.monotonic(),
+            }
+            self.epoch += 1
+            return {"iid": iid, "epoch": self.epoch}
+
+    def _deregister(self, req):
+        with self._lock:
+            ok = self.instances.pop((req["service"], req["iid"]), None)
+            if ok is not None:
+                self.epoch += 1
+            return {"ok": ok is not None, "epoch": self.epoch}
+
+    def _report(self, req):
+        with self._lock:
+            inst = self.instances.get((req["service"], req["iid"]))
+            if inst is None:
+                # expired instance re-announcing: treat as a (re)register
+                raise MercuryError(Ret.NOENTRY,
+                                   f"unknown instance {req['iid']}; "
+                                   f"re-register")
+            inst["load"] = float(req.get("load", inst["load"]))
+            if "capacity" in req:
+                inst["capacity"] = int(req["capacity"])
+            inst["last"] = time.monotonic()
+            return {"epoch": self.epoch}
+
+    def _resolve(self, req):
+        service = req["service"]
+        now = time.monotonic()
+        with self._lock:
+            out = [{"iid": iid, "uris": list(v["uris"]),
+                    "capacity": v["capacity"], "load": v["load"],
+                    "age": now - v["last"]}
+                   for (s, iid), v in self.instances.items() if s == service]
+            return {"epoch": self.epoch, "instances": out}
+
+    def _services(self, _req):
+        with self._lock:
+            return {"epoch": self.epoch,
+                    "services": sorted({s for (s, _) in self.instances})}
+
+    def _epoch(self, _req):
+        with self._lock:
+            return {"epoch": self.epoch}
+
+    # -- liveness ------------------------------------------------------------
+    def _members_expired(self, member_ids: List[str]) -> None:
+        gone = set(member_ids)
+        with self._lock:
+            dead = [k for k, v in self.instances.items()
+                    if v["member_id"] in gone]
+            for k in dead:
+                del self.instances[k]
+            if dead:
+                self.epoch += 1
+
+    def _sweep_loop(self, interval: float) -> None:
+        while not self._stop.wait(interval):
+            now = time.monotonic()
+            with self._lock:
+                dead = [k for k, v in self.instances.items()
+                        if now - v["last"] > self.ttl]
+                for k in dead:
+                    del self.instances[k]
+                if dead:
+                    self.epoch += 1
+
+    def close(self) -> None:
+        """Stop and join the sweeper (idempotent)."""
+        self._stop.set()
+        if self._sweeper.is_alive():
+            self._sweeper.join(timeout=2.0)
+
+    stop = close
+
+
+class RegistryClient:
+    """Thin origin-side wrapper over the ``fab.*`` RPCs."""
+
+    def __init__(self, engine: Engine, registry_uri: str,
+                 timeout: float = 10.0):
+        self.engine = engine
+        self.registry = registry_uri
+        self.timeout = timeout
+
+    def register(self, service: str, uris, capacity: int = 0,
+                 load: float = 0.0, iid: Optional[str] = None,
+                 member_id: Optional[str] = None) -> str:
+        out = self.engine.call(self.registry, "fab.register", {
+            "service": service, "uris": uris, "capacity": capacity,
+            "load": load, "iid": iid, "member_id": member_id,
+        }, timeout=self.timeout)
+        return out["iid"]
+
+    def deregister(self, service: str, iid: str) -> bool:
+        return self.engine.call(self.registry, "fab.deregister",
+                                {"service": service, "iid": iid},
+                                timeout=self.timeout)["ok"]
+
+    def report(self, service: str, iid: str, load: float,
+               capacity: Optional[int] = None) -> int:
+        req = {"service": service, "iid": iid, "load": load}
+        if capacity is not None:
+            req["capacity"] = capacity
+        return self.engine.call(self.registry, "fab.report", req,
+                                timeout=self.timeout)["epoch"]
+
+    def resolve(self, service: str) -> dict:
+        return self.engine.call(self.registry, "fab.resolve",
+                                {"service": service}, timeout=self.timeout)
+
+    def services(self) -> List[str]:
+        return self.engine.call(self.registry, "fab.services", {},
+                                timeout=self.timeout)["services"]
+
+    def epoch(self) -> int:
+        return self.engine.call(self.registry, "fab.epoch", {},
+                                timeout=self.timeout)["epoch"]
+
+
+def resolve_service_uris(engine: Engine, registry_uri: str, service: str,
+                         timeout: float = 10.0) -> List[str]:
+    """Resolve ``service`` to its instances' address sets (one
+    semicolon-joined string per instance, registry order).  The thin
+    entry point for clients that want name resolution without a full
+    :class:`~repro.fabric.pool.ServicePool` (checkpoint/datafeed)."""
+    view = RegistryClient(engine, registry_uri, timeout).resolve(service)
+    if not view["instances"]:
+        raise MercuryError(Ret.NOENTRY,
+                           f"no live instances of service {service!r}")
+    return [";".join(inst["uris"]) for inst in view["instances"]]
+
+
+class ServiceInstance:
+    """Self-registration helper for servers: registers this engine's
+    address set under ``service`` and keeps the registration alive with
+    periodic ``fab.report`` heartbeats carrying a live load sample.
+
+    ``load_fn`` returns the instance's current load (any float; the
+    convention used by the built-in services is *outstanding work items*,
+    e.g. active slots + queued requests).  ``close(deregister=False)``
+    simulates a crash: the reporter stops but the registry only learns via
+    TTL/membership expiry — exactly the path the pool's failover covers.
+    """
+
+    def __init__(self, engine: Engine, registry_uri: str, service: str,
+                 capacity: int = 0,
+                 load_fn: Optional[Callable[[], float]] = None,
+                 report_interval: float = 0.5,
+                 member_id: Optional[str] = None,
+                 uris: Optional[List[str]] = None):
+        self.client = RegistryClient(engine, registry_uri)
+        self.service = service
+        self.load_fn = load_fn
+        self.interval = report_interval
+        self.uris = uris if uris is not None else engine.uri
+        self.capacity = capacity
+        self.member_id = member_id
+        self._stop = threading.Event()
+        self.iid = self.client.register(
+            service, self.uris, capacity=capacity,
+            load=load_fn() if load_fn else 0.0, member_id=member_id)
+        self._thread = threading.Thread(target=self._report_loop, daemon=True,
+                                        name=f"fabric-report[{service}]")
+        self._thread.start()
+
+    def _report_loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                self.client.report(self.service, self.iid,
+                                   self.load_fn() if self.load_fn else 0.0)
+            except MercuryError:
+                # registry expired us (e.g. long GC pause): re-register
+                try:
+                    self.client.register(
+                        self.service, self.uris, capacity=self.capacity,
+                        load=self.load_fn() if self.load_fn else 0.0,
+                        iid=self.iid, member_id=self.member_id)
+                except Exception:
+                    pass
+            except Exception:
+                pass            # registry briefly unreachable: keep trying
+
+    def close(self, deregister: bool = True) -> None:
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        if deregister:
+            try:
+                self.client.deregister(self.service, self.iid)
+            except Exception:
+                pass

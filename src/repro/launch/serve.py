@@ -33,6 +33,12 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--registry", default=None, metavar="URI",
+                    help="fabric registry to self-register with (service "
+                         "'gen'): replicas started this way are routable "
+                         "through a ServicePool")
+    ap.add_argument("--service", default="gen",
+                    help="service name to register under (with --registry)")
     args = ap.parse_args(argv)
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
@@ -42,9 +48,12 @@ def main(argv=None):
                         n_slots=args.slots)
 
     server = Engine(args.listen)
-    gw = ServingGateway(server, serve)
+    gw = ServingGateway(server, serve, registry=args.registry,
+                        service=args.service)
     print(f"serving {cfg.name} at {server.uri} "
-          f"({args.slots} slots, max_len {args.max_len})")
+          f"({args.slots} slots, max_len {args.max_len})"
+          + (f", registered with {args.registry} as {args.service!r}"
+             if args.registry else ""))
 
     if args.demo:
         rng = np.random.default_rng(0)

@@ -37,6 +37,27 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     on_token: Optional[Callable[[int, int], None]] = None
+    _done_cbs: List[Callable[[], None]] = field(default_factory=list)
+    _cb_lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def add_done_callback(self, cb: Callable[[], None]) -> None:
+        """Run ``cb`` when the request completes (immediately if it
+        already has) — lets RPC handlers respond event-driven instead of
+        parking a handler-pool thread on ``done_event.wait``."""
+        with self._cb_lock:
+            if not self.done_event.is_set():
+                self._done_cbs.append(cb)
+                return
+        cb()
+
+    def _fire_done(self) -> None:
+        with self._cb_lock:
+            cbs, self._done_cbs = self._done_cbs, []
+        for cb in cbs:
+            try:
+                cb()
+            except Exception:
+                pass       # a failing waiter must not kill the step loop
 
 
 class ServeEngine:
@@ -53,6 +74,8 @@ class ServeEngine:
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros((n_slots,), np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        # set on submit: idle step loops wait on this instead of polling
+        self.work = threading.Event()
         self._rng = jax.random.PRNGKey(seed)
         self._rid = 0
         self._lock = threading.Lock()
@@ -93,6 +116,7 @@ class ServeEngine:
         req = Request(rid, prompt, max_new,
                       temperature, eos_id, frontend, on_token=on_token)
         self.queue.put(req)
+        self.work.set()
         return req
 
     def stats(self) -> Dict[str, int]:
@@ -135,6 +159,7 @@ class ServeEngine:
             req.on_token(req.rid, tok)
         if tok == req.eos_id or len(req.out_tokens) >= req.max_new:
             req.done_event.set()
+            req._fire_done()
 
     # ------------------------------------------------------------------ step
     def step(self) -> int:

@@ -34,9 +34,12 @@ from .base import (alloc_from_manifest, checksum_of, flatten_named,
 
 class CheckpointServer:
     """Hosts checkpoints in memory; every stored shard set stays
-    registered for one-sided restore pulls."""
+    registered for one-sided restore pulls.  With ``registry=`` the
+    server registers itself as an instance of service ``service`` so
+    clients can resolve it by name through the fabric."""
 
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, registry: Optional[str] = None,
+                 service: str = "ckpt"):
         self.engine = engine
         self.store: Dict[Tuple[str, int], dict] = {}   # (name, step) -> entry
         self._lock = threading.Lock()
@@ -44,6 +47,16 @@ class CheckpointServer:
         engine.register("ckpt.get", self._get)
         engine.register("ckpt.list", self._list)
         engine.register("ckpt.delete", self._delete)
+        self.instance = None
+        if registry is not None:
+            from ..fabric.registry import ServiceInstance
+            self.instance = ServiceInstance(
+                engine, registry, service,
+                load_fn=lambda: float(len(self.store)))
+
+    def close(self) -> None:
+        if self.instance is not None:
+            self.instance.close()
 
     # -- handlers (run on the engine's handler pool) -------------------------
     def _put(self, req):
@@ -105,8 +118,16 @@ class CheckpointServer:
 
 
 class CheckpointClient:
-    def __init__(self, engine: Engine, server_uri: str):
+    def __init__(self, engine: Engine, server_uri: Optional[str] = None,
+                 registry: Optional[str] = None, service: str = "ckpt"):
+        """Address either directly (``server_uri``) or by service name
+        through the fabric registry (``registry=`` + ``service=``)."""
         self.engine = engine
+        if server_uri is None:
+            if registry is None:
+                raise ValueError("need server_uri or registry")
+            from ..fabric.registry import resolve_service_uris
+            server_uri = resolve_service_uris(engine, registry, service)[0]
         self.server = server_uri
         self._pool = cf.ThreadPoolExecutor(max_workers=1,
                                            thread_name_prefix="ckpt-async")

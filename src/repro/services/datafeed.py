@@ -28,7 +28,8 @@ EAGER_LIMIT = 256 * 1024
 
 class DataFeedServer:
     def __init__(self, engine: Engine, source, eager_limit: int = EAGER_LIMIT,
-                 keep: int = 8):
+                 keep: int = 8, registry: Optional[str] = None,
+                 service: str = "feed"):
         self.engine = engine
         self.source = source                     # needs .batch_at(step)
         self.eager_limit = eager_limit
@@ -37,6 +38,14 @@ class DataFeedServer:
         self._lock = threading.Lock()
         engine.register("feed.get", self._get)
         engine.register("feed.spec", self._spec)
+        self.instance = None
+        if registry is not None:
+            from ..fabric.registry import ServiceInstance
+            self.instance = ServiceInstance(engine, registry, service)
+
+    def close(self) -> None:
+        if self.instance is not None:
+            self.instance.close()
 
     def _spec(self, _req):
         b = self.source.batch_at(0)
@@ -67,8 +76,17 @@ class DataFeedServer:
 
 
 class DataFeedClient:
-    def __init__(self, engine: Engine, feeders: List[str], depth: int = 2):
+    def __init__(self, engine: Engine, feeders: Optional[List[str]] = None,
+                 depth: int = 2, registry: Optional[str] = None,
+                 service: str = "feed"):
+        """``feeders`` is an explicit URI list, or pass ``registry=`` to
+        resolve every live instance of ``service`` by name."""
         self.engine = engine
+        if feeders is None:
+            if registry is None:
+                raise ValueError("need feeders or registry")
+            from ..fabric.registry import resolve_service_uris
+            feeders = resolve_service_uris(engine, registry, service)
         self.feeders = feeders
         self.depth = depth
         self._pending: Dict[int, object] = {}

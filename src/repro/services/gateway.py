@@ -7,15 +7,22 @@ RPCs:
                    client's registered memory; the gateway pulls them
                    one-sidedly (zero-copy on sm/self transports) instead
                    of carrying them in the eager message
-  ``gen.result``   {rid[, wait]} → {tokens, done}
+  ``gen.result``   {rid[, wait, timeout]} → {tokens, done} — with
+                   ``wait`` the response is sent *event-driven* from the
+                   request's done callback (deadline timer for the
+                   timeout), so a parked waiter costs no handler thread
   ``gen.generate`` blocking submit+wait (handler parks on the request's
                    done event — it runs on the engine's handler pool, so
                    the progress thread keeps spinning: exactly the
                    multithreaded-executor shim of paper C5)
-  ``gen.stats``    → queue/slot utilization
+  ``gen.stats``    → queue/slot utilization + load (the fabric's
+                   piggybacked balancing signal)
 
-A background thread drives ``ServeEngine.step()`` whenever work exists —
-continuous batching across concurrently connected clients.
+A background thread drives ``ServeEngine.step()`` whenever work exists
+(woken by the engine's work event — no idle polling); with ``registry=``
+the gateway self-registers as an instance of service ``service`` and
+reports its load, making it routable through a
+:class:`~repro.fabric.pool.ServicePool`.
 """
 from __future__ import annotations
 
@@ -27,11 +34,14 @@ import numpy as np
 
 from ..core.bulk import BulkDescriptor
 from ..core.executor import Engine
+from ..core.types import Ret
 from ..serve.engine import Request, ServeEngine
 
 
 class ServingGateway:
-    def __init__(self, engine: Engine, serve: ServeEngine):
+    def __init__(self, engine: Engine, serve: ServeEngine,
+                 registry: Optional[str] = None, service: str = "gen",
+                 report_interval: float = 0.5):
         self.engine = engine
         self.serve = serve
         self.requests: Dict[int, Request] = {}
@@ -41,11 +51,24 @@ class ServingGateway:
         engine.register("gen.submit", self._submit)
         engine.register("gen.submit_bulk", self._submit_bulk,
                         pass_handle=True)
-        engine.register("gen.result", self._result)
+        engine.register("gen.result", self._result, pass_handle=True)
         engine.register("gen.generate", self._generate)
         engine.register("gen.stats", self._stats)
+        self.instance = None
+        if registry is not None:
+            # lazy import (like checkpoint/datafeed): services must not
+            # hard-depend on fabric, keeping the layering acyclic
+            from ..fabric.registry import ServiceInstance
+            self.instance = ServiceInstance(
+                engine, registry, service, capacity=serve.n_slots,
+                load_fn=self._load, report_interval=report_interval)
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
+
+    def _load(self) -> float:
+        """Outstanding work items — the piggybacked balancing signal."""
+        s = self.serve.stats()
+        return float(s["active_slots"] + s["queued"])
 
     def _enqueue(self, req_in) -> Request:
         fe = req_in.get("frontend")
@@ -83,20 +106,56 @@ class ServingGateway:
         out = {"rid": self._enqueue(req_in).rid}
         handle.respond(out)
 
-    def _result(self, req_in):
-        rid = int(req_in["rid"])
-        with self._lock:
-            req = self.requests.get(rid)
-        if req is None:
-            return {"error": "unknown rid"}
-        if req_in.get("wait"):
-            req.done_event.wait(float(req_in.get("timeout", 60.0)))
+    def _result_payload(self, rid: int, req: Request) -> dict:
         done = req.done_event.is_set()
         out = {"tokens": list(req.out_tokens), "done": done}
         if done:
             with self._lock:
                 self.requests.pop(rid, None)
         return out
+
+    def _result(self, req_in, handle):
+        rid = int(req_in["rid"])
+        with self._lock:
+            req = self.requests.get(rid)
+        if req is None:
+            handle.respond({"error": "unknown rid"})
+            return
+        if not req_in.get("wait") or req.done_event.is_set():
+            handle.respond(self._result_payload(rid, req))
+            return
+        # Waiting path: respond from the request's done callback (or the
+        # deadline timer) instead of parking this handler-pool thread.
+        handle.deferred = True
+        once = threading.Lock()
+        state = {"sent": False}
+
+        def finish():
+            with once:
+                if state["sent"]:
+                    return
+                state["sent"] = True
+            try:
+                handle.respond(self._result_payload(rid, req))
+            except Exception as e:
+                # e.g. MSGSIZE on a huge token payload: report instead of
+                # letting the error escape into the caller's thread (the
+                # serve step loop or the progress thread's deadline sweep)
+                try:
+                    if not handle.responded:
+                        handle.respond(f"{type(e).__name__}: {e}",
+                                       ret=Ret.FAULT)
+                except Exception:
+                    pass
+
+        entry = self.engine.ctx.add_deadline(
+            time.monotonic() + float(req_in.get("timeout", 60.0)), finish)
+
+        def on_done():
+            self.engine.ctx.disarm(entry)
+            finish()
+
+        req.add_done_callback(on_done)
 
     def _generate(self, req_in):
         req = self._enqueue(req_in)
@@ -108,7 +167,8 @@ class ServingGateway:
 
     def _stats(self, _req):
         out = self.serve.stats()
-        out.update(steps=self.steps, uris=self.engine.uri)
+        out.update(steps=self.steps, uris=self.engine.uri,
+                   load=self._load())
         return out
 
     def _loop(self):
@@ -116,8 +176,22 @@ class ServingGateway:
             n = self.serve.step()
             self.steps += 1 if n else 0
             if n == 0 and self.serve.queue.empty():
-                time.sleep(0.005)
+                # park until the next submit (double-check after clearing
+                # so a racing submit can't be missed; the bounded wait
+                # caps the cost of any residual race)
+                self.serve.work.clear()
+                if self.serve.queue.empty() and not self._stop.is_set():
+                    self.serve.work.wait(0.05)
 
-    def stop(self):
+    def close(self):
+        """Graceful stop: deregister from the fabric and join the step
+        loop (idempotent)."""
+        if self._stop.is_set():
+            return
+        if self.instance is not None:
+            self.instance.close()
         self._stop.set()
+        self.serve.work.set()            # wake a parked step loop
         self._thread.join(timeout=2.0)
+
+    stop = close

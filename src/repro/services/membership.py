@@ -24,6 +24,7 @@ class MembershipServer:
         self.epoch = 0
         self._lock = threading.Lock()
         self._stop = threading.Event()
+        self._expire_cbs: List[Callable[[List[str]], None]] = []
         engine.register("mem.join", self._join)
         engine.register("mem.leave", self._leave)
         engine.register("mem.heartbeat", self._heartbeat)
@@ -44,9 +45,13 @@ class MembershipServer:
 
     def _leave(self, req):
         with self._lock:
-            if self.members.pop(req["member_id"], None) is not None:
+            left = self.members.pop(req["member_id"], None) is not None
+            if left:
                 self.epoch += 1
-            return self._view_locked()
+            view = self._view_locked()
+        if left:
+            self._fire_expired([req["member_id"]])
+        return view
 
     def _heartbeat(self, req):
         with self._lock:
@@ -70,9 +75,23 @@ class MembershipServer:
                 "members": sorted(self.members.keys()),
                 "uris": {k: v["uri"] for k, v in self.members.items()}}
 
+    # -- expiry hooks (e.g. the service registry reaping instances whose
+    # member died) -----------------------------------------------------------
+    def on_expire(self, cb: Callable[[List[str]], None]) -> None:
+        """Register ``cb(dead_member_ids)``; fired after a heartbeat
+        sweep or an explicit leave removed members (outside the lock)."""
+        self._expire_cbs.append(cb)
+
+    def _fire_expired(self, dead: List[str]) -> None:
+        for cb in self._expire_cbs:
+            try:
+                cb(dead)
+            except Exception:
+                pass                      # hooks must not kill the sweeper
+
     def _sweep_loop(self, interval: float):
-        while not self._stop.is_set():
-            time.sleep(interval)
+        # Event.wait (not sleep) so close() can interrupt and join promptly
+        while not self._stop.wait(interval):
             now = time.monotonic()
             with self._lock:
                 dead = [k for k, v in self.members.items()
@@ -81,9 +100,17 @@ class MembershipServer:
                     del self.members[k]
                 if dead:
                     self.epoch += 1
+            if dead:
+                self._fire_expired(dead)
 
-    def stop(self):
+    def close(self):
+        """Graceful stop: joins the sweeper thread (idempotent) — daemon
+        teardown alone leaks the thread across tests."""
         self._stop.set()
+        if self._sweeper.is_alive():
+            self._sweeper.join(timeout=2.0)
+
+    stop = close
 
 
 class MembershipClient:
@@ -108,8 +135,7 @@ class MembershipClient:
         return self.view
 
     def _beat(self):
-        while not self._stop.is_set():
-            time.sleep(self.interval)
+        while not self._stop.wait(self.interval):
             try:
                 view = self.engine.call(self.server, "mem.heartbeat",
                                         {"member_id": self.member_id,
@@ -126,8 +152,12 @@ class MembershipClient:
 
     def leave(self):
         self._stop.set()
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join(timeout=2.0)
         try:
             self.engine.call(self.server, "mem.leave",
                              {"member_id": self.member_id}, timeout=5.0)
         except Exception:
             pass
+
+    close = leave

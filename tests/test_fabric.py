@@ -1,0 +1,540 @@
+"""Service fabric: registry lifecycle (register/resolve/epoch/TTL/member
+expiry), ServicePool routing (rr / least-loaded / locality), budgeted
+retries + deadlines + hedging, credit-based backpressure, replica-death
+failover, sm→tcp tier failover with cached-view demotion, graceful
+close() thread-join semantics, and the event-driven gen.result path."""
+import queue
+import threading
+import time
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core.executor import Engine, RemoteError
+from repro.fabric import (BudgetExhausted, RegistryClient, RegistryService,
+                          RetryPolicy, ServiceInstance, ServicePool,
+                          resolve_service_uris)
+from repro.serve.engine import Request
+from repro.services import MembershipServer, ServingGateway
+
+
+@pytest.fixture
+def reg():
+    """Registry on its own engine, fast sweeps for test-speed expiry."""
+    with Engine("tcp://127.0.0.1:0") as e:
+        svc = RegistryService(e, instance_ttl=0.6, sweep_interval=0.1)
+        yield e, svc
+        svc.close()
+
+
+def _echo_engine(name):
+    e = Engine("tcp://127.0.0.1:0")
+    e.register("echo", lambda x, _n=name: (_n, x))
+    return e
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_register_resolve_epoch(reg):
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as cli_e:
+        cli = RegistryClient(cli_e, reg_e.uri)
+        e0 = cli.epoch()
+        iid = cli.register("svc", "tcp://127.0.0.1:1111", capacity=4)
+        assert cli.epoch() == e0 + 1
+        view = cli.resolve("svc")
+        assert [i["iid"] for i in view["instances"]] == [iid]
+        assert view["instances"][0]["capacity"] == 4
+        # load reports must NOT bump the epoch (cached views stay valid)
+        cli.report("svc", iid, load=7.5)
+        assert cli.epoch() == e0 + 1
+        assert cli.resolve("svc")["instances"][0]["load"] == 7.5
+        assert cli.services() == ["svc"]
+        assert cli.deregister("svc", iid)
+        assert cli.epoch() == e0 + 2
+        assert cli.resolve("svc")["instances"] == []
+        from repro.core.types import MercuryError
+        with pytest.raises(MercuryError):
+            resolve_service_uris(cli_e, reg_e.uri, "svc")
+
+
+def test_registry_ttl_expires_silent_instance(reg):
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as cli_e:
+        cli = RegistryClient(cli_e, reg_e.uri)
+        cli.register("svc", "tcp://127.0.0.1:1111")   # never reports again
+        e1 = cli.epoch()
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            if not cli.resolve("svc")["instances"]:
+                break
+            time.sleep(0.1)
+        assert cli.resolve("svc")["instances"] == []
+        assert cli.epoch() > e1
+
+
+def test_registry_reaps_instances_of_dead_members(reg):
+    """An instance bound to a member_id dies with its member (via the
+    MembershipServer.on_expire hook), even while it keeps reporting."""
+    reg_e, reg_svc = reg
+    ms = MembershipServer(reg_e, heartbeat_timeout=0.4, sweep_interval=0.1)
+    ms.on_expire(reg_svc._members_expired)
+    with Engine("tcp://127.0.0.1:0") as w:
+        cli = RegistryClient(w, reg_e.uri)
+        w.call(reg_e.uri, "mem.join", {"member_id": "w1", "uri": w.uri})
+        iid = cli.register("svc", w.uri, member_id="w1")
+        # member w1 never heartbeats; the instance DOES keep reporting,
+        # so only the member-expiry path can remove it
+        deadline = time.time() + 5
+        gone = False
+        while time.time() < deadline and not gone:
+            try:
+                cli.report("svc", iid, load=0.0)
+            except RemoteError:
+                gone = True                    # NOENTRY: reaped
+            time.sleep(0.05)
+        assert gone
+        assert cli.resolve("svc")["instances"] == []
+    ms.close()
+
+
+# ---------------------------------------------------------------------------
+# pool routing
+# ---------------------------------------------------------------------------
+def test_pool_round_robin_distributes(reg):
+    reg_e, _ = reg
+    a, b = _echo_engine("a"), _echo_engine("b")
+    with a, b, Engine("tcp://127.0.0.1:0") as cli:
+        ia = ServiceInstance(a, reg_e.uri, "svc", capacity=4,
+                             report_interval=0.1)
+        ib = ServiceInstance(b, reg_e.uri, "svc", capacity=4,
+                             report_interval=0.1)
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="rr")
+        hits = [pool.call("echo", i, timeout=10.0)[0] for i in range(8)]
+        assert hits.count("a") == 4 and hits.count("b") == 4
+        ia.close(), ib.close()
+
+
+def test_pool_least_loaded_prefers_idle(reg):
+    reg_e, _ = reg
+    a, b = _echo_engine("a"), _echo_engine("b")
+    with a, b, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        ia = rc.register("svc", a.uri, capacity=4, load=9.0)  # busy
+        ib = rc.register("svc", b.uri, capacity=4, load=0.0)  # idle
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="least")
+        hits = {pool.call("echo", i, timeout=10.0)[0] for i in range(6)}
+        assert hits == {"b"}
+        rc.deregister("svc", ia), rc.deregister("svc", ib)
+
+
+def test_pool_locality_prefers_cheap_tier(reg):
+    """Replica advertising a self:// tier must win over a tcp-only one
+    for a co-located (same-process) client."""
+    reg_e, _ = reg
+    tag = uuid.uuid4().hex[:6]
+    near = Engine([f"self://near-{tag}", "tcp://127.0.0.1:0"])
+    far = _echo_engine("far")
+    near.register("echo", lambda x: ("near", x))
+    with near, far, Engine([f"self://cli-{tag}",
+                            "tcp://127.0.0.1:0"]) as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        i1 = rc.register("svc", near.uri, capacity=4)
+        i2 = rc.register("svc", far.uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="locality")
+        tiers = sorted(r.stat()["tier"] for r in pool.replicas())
+        assert tiers == ["self", "tcp"]
+        hits = {pool.call("echo", i, timeout=10.0)[0] for i in range(6)}
+        assert hits == {"near"}
+        rc.deregister("svc", i1), rc.deregister("svc", i2)
+
+
+# ---------------------------------------------------------------------------
+# retries / deadlines / hedging / flow control
+# ---------------------------------------------------------------------------
+def test_pool_retries_around_dead_replica(reg):
+    reg_e, _ = reg
+    ok = _echo_engine("ok")
+    with ok, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        dead = rc.register("svc", "tcp://127.0.0.1:1", capacity=4)
+        live = rc.register("svc", ok.uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="rr",
+                           policy=RetryPolicy(attempts=3, rpc_timeout=2.0,
+                                              backoff_base=0.01))
+        # every call must succeed even when ranked onto the dead one first
+        assert all(pool.call("echo", i, timeout=15.0)[0] == "ok"
+                   for i in range(6))
+        rc.deregister("svc", dead), rc.deregister("svc", live)
+
+
+def test_pool_deadline_bounds_slow_service(reg):
+    reg_e, _ = reg
+    slow = Engine("tcp://127.0.0.1:0")
+    slow.register("nap", lambda x: time.sleep(3.0) or "late")
+    with slow, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        iid = rc.register("svc", slow.uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc",
+                           policy=RetryPolicy(attempts=2, rpc_timeout=0.3,
+                                              backoff_base=0.01,
+                                              jitter=0.0))
+        t0 = time.monotonic()
+        with pytest.raises(Exception):
+            pool.call("nap", None, timeout=0.8)
+        elapsed = time.monotonic() - t0
+        # never exceeds the deadline by more than one rpc timeout
+        assert elapsed < 0.8 + 0.3 + 0.3, elapsed
+        rc.deregister("svc", iid)
+
+
+def test_pool_hedged_request_beats_straggler(reg):
+    reg_e, _ = reg
+    slow = Engine("tcp://127.0.0.1:0")
+    slow.register("work", lambda x: time.sleep(2.0) or "slow")
+    fast = Engine("tcp://127.0.0.1:0")
+    fast.register("work", lambda x: "fast")
+    with slow, fast, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        i1 = rc.register("svc", slow.uri, capacity=4)
+        i2 = rc.register("svc", fast.uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="rr",
+                           policy=RetryPolicy(attempts=3, rpc_timeout=5.0,
+                                              hedge_after=0.1))
+        t0 = time.monotonic()
+        outs = [pool.call("work", i, timeout=10.0) for i in range(4)]
+        dt = time.monotonic() - t0
+        assert all(o == "fast" for o in outs)   # hedge wins every time
+        assert dt < 2.0, dt                     # never waited for slow
+        rc.deregister("svc", i1), rc.deregister("svc", i2)
+
+
+def test_pool_credit_backpressure(reg):
+    reg_e, _ = reg
+    release = threading.Event()
+    srv = Engine("tcp://127.0.0.1:0")
+    srv.register("hold", lambda x: release.wait(10.0) and "held")
+    with srv, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        iid = rc.register("svc", srv.uri, capacity=2)
+        pool = ServicePool(cli, reg_e.uri, "svc", credits_per_target=2,
+                           policy=RetryPolicy(attempts=1, rpc_timeout=15.0))
+        import concurrent.futures as cf
+        with cf.ThreadPoolExecutor(2) as tp:
+            f1 = tp.submit(pool.call, "hold", 1, 12.0)
+            f2 = tp.submit(pool.call, "hold", 2, 12.0)
+            deadline = time.time() + 5
+            while time.time() < deadline:
+                if pool.stats()["replicas"][0]["inflight"] == 2:
+                    break
+                time.sleep(0.02)
+            st = pool.stats()["replicas"][0]
+            assert st["inflight"] == 2          # both credits consumed
+            # third call: saturated -> bounded wait -> backpressure error
+            with pytest.raises(BudgetExhausted):
+                pool.call("hold", 3, timeout=0.4)
+            st = pool.stats()["replicas"][0]
+            assert st["backpressured"] >= 1 and st["rejected"] >= 1
+            release.set()
+            assert f1.result(15) == "held" and f2.result(15) == "held"
+        # all credits returned after completion
+        assert pool.stats()["replicas"][0]["inflight"] == 0
+        rc.deregister("svc", iid)
+
+
+def test_pool_failover_on_replica_death(reg):
+    """Kill a replica abruptly mid-run: no client-visible failure, and
+    the TTL sweep (epoch bump) eventually drops it from the view."""
+    reg_e, _ = reg
+    a, b = _echo_engine("a"), _echo_engine("b")
+    ia = ServiceInstance(a, reg_e.uri, "svc", capacity=4,
+                         report_interval=0.1)
+    ib = ServiceInstance(b, reg_e.uri, "svc", capacity=4,
+                         report_interval=0.1)
+    with b, Engine("tcp://127.0.0.1:0") as cli:
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="rr",
+                           refresh_interval=0.1,
+                           policy=RetryPolicy(attempts=4, rpc_timeout=1.0,
+                                              backoff_base=0.01))
+        assert len(pool.replicas()) == 2
+        ia.close(deregister=False)     # heartbeats stop: simulated crash
+        a.shutdown()
+        # every call still succeeds (retries absorb the dead replica)
+        assert all(pool.call("echo", i, timeout=15.0)[0] == "b"
+                   for i in range(8))
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            pool.refresh(force=True)
+            if len(pool.replicas()) == 1:
+                break
+            time.sleep(0.1)
+        assert len(pool.replicas()) == 1       # epoch bump pruned the dead
+        ib.close()
+
+
+def test_pool_affine_calls_pin_replica(reg):
+    """call_routed reports the serving instance; call_on pins follow-ups
+    to it (the gen.submit/gen.result pattern: rids are replica-local)."""
+    reg_e, _ = reg
+    a, b = _echo_engine("a"), _echo_engine("b")
+    with a, b, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        ids = {rc.register("svc", e.uri, capacity=4): n
+               for e, n in ((a, "a"), (b, "b"))}
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="rr")
+        for i in range(6):
+            out, iid = pool.call_routed("echo", i, timeout=10.0)
+            assert out[0] == ids[iid]          # winner reported truthfully
+            # pinned follow-ups always land on the same instance
+            assert all(pool.call_on(iid, "echo", j, timeout=10.0)[0]
+                       == ids[iid] for j in range(3))
+        from repro.fabric import PoolError
+        with pytest.raises(BudgetExhausted) as ei:
+            pool.call_on("no-such-iid", "echo", 0, timeout=2.0,
+                         policy=RetryPolicy(attempts=2, rpc_timeout=0.5,
+                                            backoff_base=0.01))
+        assert isinstance(ei.value.cause, PoolError)
+        for iid in ids:
+            rc.deregister("svc", iid)
+
+
+def test_pool_recovers_replica_after_transient_outage(reg):
+    """A replica that was down (marked down / undemotable) must come back
+    once reachable again — demotions are soft state, not a tombstone."""
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        srv = _echo_engine("a")
+        port_uri = srv.uri
+        iid = rc.register("svc", port_uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", down_ttl=0.2,
+                           policy=RetryPolicy(attempts=2, rpc_timeout=1.0,
+                                              backoff_base=0.01))
+        assert pool.call("echo", 1, timeout=10.0)[0] == "a"
+        srv.shutdown()                 # transient outage begins
+        with pytest.raises(Exception):
+            pool.call("echo", 2, timeout=3.0)
+        rep = pool.replicas()[0]
+        assert not rep.is_up or rep.bad_schemes   # excluded right now
+        # replica comes back on a NEW port; re-registers under same iid
+        srv2 = _echo_engine("a2")
+        rc.register("svc", srv2.uri, capacity=4, iid=iid)
+        deadline = time.time() + 5
+        ok = False
+        while time.time() < deadline and not ok:
+            try:
+                ok = pool.call("echo", 3, timeout=3.0)[0] == "a2"
+            except Exception:
+                time.sleep(0.1)
+        assert ok                      # recovered, not tombstoned
+        srv2.shutdown()
+        rc.deregister("svc", iid)
+
+
+# ---------------------------------------------------------------------------
+# tier failover (na/multi + pool demotion)
+# ---------------------------------------------------------------------------
+def test_multi_lookup_falls_back_past_stale_sm():
+    """An address set whose sm tier is unreachable must resolve tcp."""
+    tag = uuid.uuid4().hex[:6]
+    live = _echo_engine("live")
+    with live, Engine([f"sm://mf-cli-{tag}", "tcp://127.0.0.1:0"]) as cli:
+        addr = cli.lookup(f"sm://ghost-{tag};{live.uri}")
+        assert addr.uri.startswith("tcp://")
+        assert cli.call(addr, "echo", 1, timeout=10.0)[0] == "live"
+
+
+def test_pool_demotes_tier_when_sm_dies_midrun(reg):
+    """A replica resolved at the sm tier whose segment goes away must be
+    demoted to tcp in the pool's cached view, transparently."""
+    reg_e, _ = reg
+    tag = uuid.uuid4().hex[:6]
+    sm_half = Engine(f"sm://dm-{tag}")
+    tcp_half = _echo_engine("tcp-half")
+    sm_half.register("echo", lambda x: ("sm-half", x))
+    with tcp_half, Engine([f"sm://dmc-{tag}",
+                           "tcp://127.0.0.1:0"]) as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        iid = rc.register("svc", f"{sm_half.uri};{tcp_half.uri}",
+                          capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", balancer="locality",
+                           policy=RetryPolicy(attempts=3, rpc_timeout=2.0,
+                                              backoff_base=0.01))
+        rep = pool.replicas()[0]
+        assert rep.stat()["tier"] == "sm"
+        assert pool.call("echo", 1, timeout=10.0)[0] == "sm-half"
+        sm_half.shutdown()             # sm segment vanishes mid-run
+        out = pool.call("echo", 2, timeout=15.0)
+        assert out[0] == "tcp-half"    # transparent fallback
+        assert rep.stat()["tier"] == "tcp" and "sm" in rep.bad_schemes
+        rc.deregister("svc", iid)
+
+
+# ---------------------------------------------------------------------------
+# graceful close semantics + event-driven gen.result
+# ---------------------------------------------------------------------------
+def test_membership_close_joins_sweeper():
+    with Engine("tcp://127.0.0.1:0") as e:
+        ms = MembershipServer(e, sweep_interval=0.1)
+        assert ms._sweeper.is_alive()
+        ms.close()
+        assert not ms._sweeper.is_alive()
+        ms.close()                     # idempotent
+
+
+class FakeServe:
+    """Minimal ServeEngine stand-in: completes each request with one
+    token per step — lets gateway plumbing be tested without a model."""
+
+    def __init__(self, n_slots=2, auto=True):
+        self.queue = queue.Queue()
+        self.work = threading.Event()
+        self.n_slots = n_slots
+        self.auto = auto
+        self.parked = []               # auto=False: admitted, not finished
+        self._rid = 0
+        self._lock = threading.Lock()
+
+    def submit(self, tokens, max_new=32, temperature=0.0, eos_id=-1,
+               frontend=None):
+        with self._lock:
+            self._rid += 1
+            req = Request(self._rid, np.asarray(tokens, np.int32), max_new)
+        self.queue.put(req)
+        self.work.set()
+        return req
+
+    def step(self):
+        n = 0
+        while True:
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return n
+            if self.auto:
+                req.out_tokens.append(7)
+                req.done_event.set()
+                req._fire_done()
+                n += 1
+            else:
+                self.parked.append(req)   # test completes them by hand
+
+    def stats(self):
+        return {"active_slots": 0, "n_slots": self.n_slots,
+                "queued": self.queue.qsize(), "max_len": 64}
+
+
+def test_gateway_close_joins_step_loop():
+    with Engine("tcp://127.0.0.1:0") as e:
+        gw = ServingGateway(e, FakeServe())
+        assert gw._thread.is_alive()
+        gw.close()
+        assert not gw._thread.is_alive()
+        gw.close()                     # idempotent
+
+
+def test_gen_result_wait_is_event_driven():
+    """Waiting gen.result handlers must not park handler-pool threads:
+    with every pool thread's worth of waiters outstanding, an unrelated
+    RPC still gets through, and completion wakes all waiters."""
+    serve = FakeServe(auto=False)
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        gw = ServingGateway(srv, serve)
+        rid = cli.call(srv.uri, "gen.submit", {"tokens": [1, 2]})["rid"]
+        deadline = time.time() + 5
+        while not serve.parked and time.time() < deadline:
+            time.sleep(0.01)
+        req = serve.parked[0]                  # admitted, unfinished
+        waiters = [cli.call_async(srv.uri, "gen.result",
+                                  {"rid": rid, "wait": True,
+                                   "timeout": 20.0}, timeout=30.0)
+                   for _ in range(4)]          # = srv handler_threads
+        time.sleep(0.2)
+        # old busy/parked design: all 4 pool threads blocked -> this hangs
+        stats = cli.call(srv.uri, "gen.stats", {}, timeout=2.0)
+        assert stats["n_slots"] == 2
+        req.out_tokens.append(9)
+        req.done_event.set()
+        req._fire_done()
+        outs = [w.result(timeout=10) for w in waiters]
+        assert all(o["done"] and o["tokens"] == [9] for o in outs)
+        gw.close()
+
+
+def test_gen_result_wait_times_out_with_partial_tokens():
+    serve = FakeServe(auto=False)
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        gw = ServingGateway(srv, serve)
+        rid = cli.call(srv.uri, "gen.submit", {"tokens": [1]})["rid"]
+        t0 = time.monotonic()
+        out = cli.call(srv.uri, "gen.result",
+                       {"rid": rid, "wait": True, "timeout": 0.3},
+                       timeout=10.0)
+        assert not out["done"] and time.monotonic() - t0 < 5.0
+        gw.close()
+
+
+def test_gateway_self_registers_and_routes_through_pool(reg):
+    reg_e, _ = reg
+    serves = [FakeServe(), FakeServe()]
+    engines = [Engine("tcp://127.0.0.1:0") for _ in serves]
+    gws = [ServingGateway(e, s, registry=reg_e.uri, service="gen",
+                          report_interval=0.1)
+           for e, s in zip(engines, serves)]
+    with Engine("tcp://127.0.0.1:0") as cli:
+        pool = ServicePool(cli, reg_e.uri, "gen", balancer="rr",
+                           refresh_interval=0.1,
+                           policy=RetryPolicy(attempts=4, rpc_timeout=5.0,
+                                              backoff_base=0.01))
+        assert len(pool.replicas()) == 2
+        outs = [pool.call("gen.generate", {"tokens": [1, 2], "max_new": 4},
+                          timeout=15.0) for _ in range(4)]
+        assert all(o["done"] for o in outs)
+        # capacity was piggybacked from n_slots
+        assert all(r.capacity == 2 for r in pool.replicas())
+        # kill one replica: calls keep succeeding, view shrinks on expiry
+        gws[0].instance.close(deregister=False)
+        gws[0].stop()
+        engines[0].shutdown()
+        assert all(pool.call("gen.generate",
+                             {"tokens": [3], "max_new": 2},
+                             timeout=15.0)["done"] for _ in range(4))
+    gws[1].close()
+    engines[1].shutdown()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / datafeed resolvable by name
+# ---------------------------------------------------------------------------
+def test_checkpoint_resolvable_by_name(reg):
+    from repro.services import CheckpointClient, CheckpointServer
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli_e:
+        cs = CheckpointServer(srv, registry=reg_e.uri)
+        cli = CheckpointClient(cli_e, registry=reg_e.uri)
+        tree = {"w": np.arange(100, dtype=np.float32)}
+        assert cli.save("m", 1, tree)["ok"]
+        out, step = cli.restore("m", {"w": np.zeros(100, np.float32)})
+        assert step == 1
+        np.testing.assert_array_equal(out["w"], tree["w"])
+        cs.close()
+
+
+def test_datafeed_resolvable_by_name(reg):
+    from repro.data.pipeline import SyntheticSource
+    from repro.services import DataFeedClient, DataFeedServer
+    reg_e, _ = reg
+    src = SyntheticSource(vocab=100, seq_len=16, batch_per_host=2)
+    with Engine("tcp://127.0.0.1:0") as fe, \
+            Engine("tcp://127.0.0.1:0") as tr:
+        fs = DataFeedServer(fe, src, registry=reg_e.uri)
+        cli = DataFeedClient(tr, registry=reg_e.uri)
+        b = cli.get(3)
+        np.testing.assert_array_equal(b["tokens"],
+                                      src.batch_at(3)["tokens"])
+        fs.close()

@@ -1,0 +1,140 @@
+"""Property tests (tests/proptest.py style) for the fabric's
+retry/deadline budget: for random latency schedules, a call never
+exceeds its deadline by more than one RPC timeout (the clamped design in
+fact never exceeds the deadline at all) and never issues more than the
+budgeted attempts."""
+import numpy as np
+import pytest
+
+from proptest import cases
+from repro.fabric.policy import (BudgetExhausted, DeadlineExceeded,
+                                 NonRetryable, RetryPolicy,
+                                 call_with_budget)
+
+
+class SimClock:
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        assert dt >= 0
+        self.t += dt
+
+
+def _draw_policy(rng) -> RetryPolicy:
+    return RetryPolicy(
+        attempts=int(rng.integers(1, 6)),
+        rpc_timeout=float(rng.uniform(0.05, 2.0)),
+        backoff_base=float(rng.uniform(0.001, 0.2)),
+        backoff_factor=float(rng.uniform(1.0, 3.0)),
+        backoff_max=float(rng.uniform(0.2, 1.0)),
+        jitter=float(rng.uniform(0.0, 1.0)))
+
+
+@cases(n=200, seed=11)
+def test_budget_and_deadline_invariants(rng):
+    """Random latency schedule + random success point: the driver must
+    (a) issue <= policy.attempts attempts, (b) finish by the deadline —
+    strictly tighter than the deadline + one-rpc-timeout contract, and
+    (c) never sleep backwards."""
+    policy = _draw_policy(rng)
+    clock = SimClock(float(rng.uniform(0, 100)))
+    deadline = clock.t + float(rng.uniform(0.01, 3.0))
+    # per-attempt service latency; attempt i succeeds iff i == success_at
+    schedule = rng.uniform(0.0, 3.0, size=policy.attempts + 2)
+    success_at = int(rng.integers(0, policy.attempts + 2))
+    issued = []
+
+    def attempt(idx, timeout):
+        issued.append(idx)
+        assert timeout > 0
+        # timeout is clamped to both the rpc cap and the deadline
+        assert timeout <= policy.rpc_timeout + 1e-12
+        assert clock.t + timeout <= deadline + 1e-9
+        lat = float(schedule[idx])
+        if lat >= timeout:            # attempt times out at the transport
+            clock.sleep(timeout)
+            raise TimeoutError(f"attempt {idx} timed out")
+        clock.sleep(lat)
+        if idx == success_at:
+            return f"ok@{idx}"
+        raise ConnectionError(f"attempt {idx} transient failure")
+
+    try:
+        out = call_with_budget(policy, deadline, attempt, clock=clock,
+                               sleep=clock.sleep, rand=rng.random)
+        assert out == f"ok@{success_at}"
+    except (BudgetExhausted, DeadlineExceeded):
+        pass
+    # (a) the attempt budget is an invariant, hedges or not
+    assert len(issued) <= policy.attempts, issued
+    assert issued == sorted(set(issued))       # each attempt once, in order
+    # (b) tight bound: the clamped design never overshoots the deadline
+    assert clock.t <= deadline + 1e-9
+    # ... which trivially satisfies the documented public contract:
+    assert clock.t <= deadline + policy.rpc_timeout + 1e-9
+
+
+@cases(n=100, seed=23)
+def test_backoff_is_bounded_and_jittered(rng):
+    policy = _draw_policy(rng)
+    for attempt in range(1, policy.attempts + 1):
+        r = float(rng.random())
+        b = policy.backoff(attempt, r)
+        raw = min(policy.backoff_base *
+                  (policy.backoff_factor ** (attempt - 1)),
+                  policy.backoff_max)
+        assert 0.0 <= b <= raw + 1e-12
+        assert b >= raw * (1.0 - policy.jitter) - 1e-12
+
+
+@cases(n=50, seed=37)
+def test_nonretryable_aborts_immediately(rng):
+    policy = _draw_policy(rng).with_(attempts=int(rng.integers(2, 6)))
+    clock = SimClock()
+    calls = []
+
+    class AppFault(Exception):
+        pass
+
+    def attempt(idx, timeout):
+        calls.append(idx)
+        raise NonRetryable(AppFault("handler ran and faulted"))
+
+    with pytest.raises(AppFault):
+        call_with_budget(policy, clock.t + 10.0, attempt, clock=clock,
+                         sleep=clock.sleep, rand=rng.random)
+    assert calls == [0]               # no retry after a non-retryable
+
+
+def test_expired_deadline_fails_fast_without_issuing():
+    clock = SimClock(5.0)
+    calls = []
+
+    def attempt(idx, timeout):
+        calls.append(idx)
+        return "nope"
+
+    with pytest.raises(DeadlineExceeded):
+        call_with_budget(RetryPolicy(attempts=3), 5.0, attempt,
+                         clock=clock, sleep=clock.sleep, rand=lambda: 0.5)
+    assert calls == []
+
+
+def test_budget_exhausted_carries_last_error():
+    clock = SimClock()
+
+    def attempt(idx, timeout):
+        clock.sleep(0.01)
+        raise ConnectionError(f"fail {idx}")
+
+    with pytest.raises(BudgetExhausted) as ei:
+        call_with_budget(RetryPolicy(attempts=3, backoff_base=0.01,
+                                     jitter=0.0),
+                         clock.t + 10.0, attempt, clock=clock,
+                         sleep=clock.sleep, rand=lambda: 0.0)
+    assert isinstance(ei.value.cause, ConnectionError)
+    assert "fail 2" in str(ei.value.cause)
