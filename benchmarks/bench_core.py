@@ -7,7 +7,12 @@
 3. RPC rate vs in-flight concurrency (the callback/CQ model's point);
 4. routed-pool throughput: 1 client fanned across 3 service replicas
    (sm+tcp mix) through the fabric's ServicePool vs the same load on a
-   single endpoint — the scale-out win is measured, not asserted.
+   single endpoint — the scale-out win is measured, not asserted;
+5. routed-pool *overload*: offered load above handler capacity, every
+   call deadlined — static credits + accept-everything servers vs
+   adaptive credits + EWMA-weighted balancing + deadline-aware
+   admission control (goodput and deadline-miss rate compared).
+   Run standalone via ``--only overload``.
 """
 from __future__ import annotations
 
@@ -369,6 +374,178 @@ def bench_pool(n_workers: int = 3, work_ms: float = 40.0,
     return out
 
 
+_OVERLOAD_WORKER_SRC = textwrap.dedent("""
+    import queue, sys, threading, time
+    sys.path.insert(0, sys.argv[1])
+    from repro.core.executor import Engine
+    from repro.fabric import ServiceInstance
+    from repro.services.base import AdmissionController
+
+    uris = sys.argv[2].split(";")
+    registry, work_ms = sys.argv[3], float(sys.argv[4])
+    n_threads, shed = int(sys.argv[5]), sys.argv[6] == "1"
+
+    adm = AdmissionController()
+    q = queue.Queue()
+    active = [0]
+    lock = threading.Lock()
+
+    def worker():
+        while True:
+            handle, x = q.get()
+            with lock:
+                active[0] += 1
+            t0 = time.monotonic()
+            time.sleep(work_ms / 1e3)
+            adm.observe(time.monotonic() - t0)   # pure service time
+            try:
+                handle.respond(x)
+            except Exception:
+                pass                    # caller gone (deadline passed)
+            with lock:
+                active[0] -= 1
+
+    with Engine(uris) as e:
+        def work(x, handle):
+            # admission BEFORE taking ownership: a shed is a plain
+            # MercuryError(OVERLOAD) response from the register wrapper
+            if shed:
+                adm.admit(handle.remaining_budget(),
+                          backlog=q.qsize() + active[0],
+                          parallelism=n_threads)
+            handle.deferred = True
+            q.put((handle, x))
+        e.register("work", work, pass_handle=True)
+        for _ in range(n_threads):
+            threading.Thread(target=worker, daemon=True).start()
+        inst = ServiceInstance(e, registry, "bench-overload",
+                               capacity=n_threads, report_interval=0.2,
+                               load_fn=lambda: float(q.qsize() + active[0]))
+        print("URI " + e.uri, flush=True)
+        sys.stdin.read()
+        inst.close()
+""")
+
+
+def bench_pool_overload(n_workers: int = 3, work_ms: float = 100.0,
+                        deadline_ms: float = 250.0, n_calls: int = 200,
+                        concurrency: int = 32,
+                        worker_threads: int = 2) -> Dict:
+    """Overload scenario: offered load exceeds aggregate handler
+    capacity (handlers are slower than the arrival rate), every call
+    carries a deadline.  Two configurations of the SAME workload:
+
+      * ``static``   — PR-2 fabric: fixed credits, locality balancer,
+                       no server-side admission.  Servers accept
+                       everything; queues grow; capacity is burned on
+                       requests whose deadlines already passed.
+      * ``adaptive`` — this PR: adaptive credits + EWMA-weighted
+                       balancing + deadline-aware admission
+                       (``Ret.OVERLOAD`` sheds, rerouted by the pool).
+
+    Reported per variant: **goodput** (calls completed within their
+    deadline / second), **deadline-miss rate**, and p50/p99 latency of
+    the within-deadline completions.  The claim under test: adaptive +
+    admission gives >= goodput and strictly lower miss rate."""
+    from contextlib import ExitStack
+
+    from repro.fabric import RegistryService, RetryPolicy, ServicePool
+
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    deadline_s = deadline_ms / 1e3
+    out: Dict = {"name": "routed_pool_overload", "workers": n_workers,
+                 "worker_threads": worker_threads, "work_ms": work_ms,
+                 "deadline_ms": deadline_ms, "calls": n_calls,
+                 "concurrency": concurrency,
+                 "capacity_rps": n_workers * worker_threads
+                 / (work_ms / 1e3)}
+
+    def run_variant(shed: bool, adaptive: bool, balancer: str) -> Dict:
+        with Engine("tcp://127.0.0.1:0") as reg_engine:
+            registry = RegistryService(reg_engine, instance_ttl=5.0)
+            with ExitStack() as stack:
+                for i in range(n_workers):
+                    p = subprocess.Popen(
+                        [sys.executable, "-c", _OVERLOAD_WORKER_SRC, src,
+                         "tcp://127.0.0.1:0", reg_engine.uri, str(work_ms),
+                         str(worker_threads), "1" if shed else "0"],
+                        stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                        text=True)
+
+                    def _stop(proc=p):
+                        try:
+                            proc.stdin.close()
+                            proc.wait(timeout=10)
+                        except Exception:
+                            proc.kill()
+                    stack.callback(_stop)
+                    line = p.stdout.readline().strip()
+                    if not line.startswith("URI "):
+                        raise RuntimeError(f"overload worker failed: "
+                                           f"{line!r}")
+                with Engine("tcp://127.0.0.1:0") as cli:
+                    pool = ServicePool(
+                        cli, reg_engine.uri, "bench-overload",
+                        balancer=balancer, credits_per_target=8,
+                        adaptive_credits=adaptive, credit_max=32,
+                        refresh_interval=0.2,
+                        policy=RetryPolicy(attempts=3,
+                                           rpc_timeout=deadline_s,
+                                           backoff_base=0.01,
+                                           jitter=0.5))
+                    payload = b"x" * 64
+                    pool.call("work", payload, timeout=5.0)      # warm
+                    lats: List[float] = []
+                    misses = [0]
+                    mlock = threading.Lock()
+
+                    def call_one(i):
+                        t0 = time.perf_counter()
+                        try:
+                            pool.call("work", payload, timeout=deadline_s)
+                            dt = time.perf_counter() - t0
+                            if dt <= deadline_s:
+                                with mlock:
+                                    lats.append(dt)
+                                return
+                        except Exception:
+                            pass
+                        with mlock:
+                            misses[0] += 1
+
+                    import concurrent.futures as cf
+                    t0 = time.perf_counter()
+                    with cf.ThreadPoolExecutor(concurrency) as tp:
+                        futs = [tp.submit(call_one, i)
+                                for i in range(n_calls)]
+                        for f in futs:
+                            f.result(timeout=120)
+                    wall = time.perf_counter() - t0
+                    st = pool.stats()
+            registry.close()
+        good = sorted(lats)
+        return {"goodput_rps": len(good) / wall,
+                "miss_rate": misses[0] / n_calls,
+                "completed_in_deadline": len(good),
+                "wall_s": wall,
+                "p50_ms": (good[len(good) // 2] * 1e3 if good else None),
+                "p99_ms": (good[int(len(good) * 0.99)] * 1e3
+                           if good else None),
+                "replica_credits": sorted(
+                    r.get("credits", 0) for r in st["replicas"])}
+
+    out["static"] = run_variant(shed=False, adaptive=False,
+                                balancer="locality")
+    out["adaptive"] = run_variant(shed=True, adaptive=True,
+                                  balancer="weighted")
+    if out["static"]["goodput_rps"] > 0:
+        out["goodput_gain_x"] = (out["adaptive"]["goodput_rps"]
+                                 / out["static"]["goodput_rps"])
+    out["miss_rate_delta"] = (out["adaptive"]["miss_rate"]
+                              - out["static"]["miss_rate"])
+    return out
+
+
 def bench_rate(inflight_levels=(1, 2, 8, 32, 128)) -> Dict:
     """Small-RPC throughput vs number of in-flight requests."""
     out: Dict = {"name": "rpc_rate", "points": []}
@@ -395,32 +572,51 @@ def bench_rate(inflight_levels=(1, 2, 8, 32, 128)) -> Dict:
 
 
 def run_all(verbose=True, transports=("self", "sm", "tcp"),
-            smoke=False) -> List[Dict]:
+            smoke=False, only=None) -> List[Dict]:
     unknown = [t for t in transports if t not in ("self", "sm", "tcp")]
     if unknown:
         raise SystemExit(f"unknown transport(s) {unknown}; "
                          f"choose from self, sm, tcp")
+    known_benches = ("latency", "bandwidth", "rate", "pool", "overload")
+    if only:
+        bad = [b for b in only if b not in known_benches]
+        if bad:
+            raise SystemExit(f"unknown bench(es) {bad}; "
+                             f"choose from {known_benches}")
+
+    def want(name):
+        # default set keeps the PR-2 behavior: overload is opt-in
+        return name in only if only else name != "overload"
+
     iters = 50 if smoke else 200
     sizes = (4 << 10, 1 << 20) if smoke else \
         (4 << 10, 64 << 10, 1 << 20, 16 << 20, 64 << 20)
-    results = [bench_latency(transports=transports, iters=iters)]
-    for t in transports:
-        if t in ("sm", "tcp"):
-            results.append(bench_bandwidth(sizes=sizes, transport=t))
-    if not smoke:
-        results.append(bench_rate())
-    results.append(bench_pool(n_calls=150 if smoke else 450))
-    if verbose:
-        lat = results[0]
-        parts = [f"raw tcp rtt {lat['raw_tcp_rtt_us']:.0f}us"]
+    results = []
+    if want("latency"):
+        results.append(bench_latency(transports=transports, iters=iters))
+    if want("bandwidth"):
         for t in transports:
-            parts.append(f"mercury {t} {lat[f'{t}_rtt_us']:.0f}us "
-                         f"(inline {lat[f'{t}_inline_rtt_us']:.0f}us)")
-        print("[latency] " + " | ".join(parts))
-        if "sm_speedup_vs_tcp" in lat:
-            print(f"[latency] sm is {lat['sm_speedup_vs_tcp']:.2f}x faster "
-                  f"than tcp loopback for small RPCs")
-        for res in results[1:]:
+            if t in ("sm", "tcp"):
+                results.append(bench_bandwidth(sizes=sizes, transport=t))
+    if want("rate") and not smoke:
+        results.append(bench_rate())
+    if want("pool"):
+        results.append(bench_pool(n_calls=150 if smoke else 450))
+    if want("overload"):
+        results.append(bench_pool_overload(
+            n_calls=160 if smoke else 320))
+    if verbose:
+        lat = next((r for r in results if r["name"] == "rpc_latency"), None)
+        if lat is not None:
+            parts = [f"raw tcp rtt {lat['raw_tcp_rtt_us']:.0f}us"]
+            for t in transports:
+                parts.append(f"mercury {t} {lat[f'{t}_rtt_us']:.0f}us "
+                             f"(inline {lat[f'{t}_inline_rtt_us']:.0f}us)")
+            print("[latency] " + " | ".join(parts))
+            if "sm_speedup_vs_tcp" in lat:
+                print(f"[latency] sm is {lat['sm_speedup_vs_tcp']:.2f}x "
+                      f"faster than tcp loopback for small RPCs")
+        for res in results:
             if res["name"] != "bulk_bandwidth":
                 continue
             print(f"[bandwidth/{res['transport']}] "
@@ -447,6 +643,20 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                       f"routed pool {res['pool_rps']:7.0f} rps | "
                       f"{res['speedup_vs_single']:.2f}x  "
                       f"(calls/replica {res['pool_calls_per_replica']})")
+            if res["name"] == "routed_pool_overload":
+                print(f"[overload] {res['workers']}x{res['worker_threads']}"
+                      f" handlers @ {res['work_ms']:.0f}ms, "
+                      f"{res['concurrency']} callers, "
+                      f"{res['deadline_ms']:.0f}ms deadlines "
+                      f"(capacity ~{res['capacity_rps']:.0f} rps):")
+                for variant in ("static", "adaptive"):
+                    v = res[variant]
+                    p99 = (f"{v['p99_ms']:.0f}ms" if v["p99_ms"] is not None
+                           else "n/a")
+                    print(f"   {variant:8s} goodput {v['goodput_rps']:6.1f}"
+                          f" rps | miss rate {v['miss_rate']:.1%} | "
+                          f"p99(good) {p99} | credits "
+                          f"{v['replica_credits']}")
     return results
 
 
@@ -460,9 +670,13 @@ if __name__ == "__main__":
                     help="reduced iterations/sizes (CI)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write results as JSON (CI perf artifact)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of "
+                         "latency,bandwidth,rate,pool,overload")
     args = ap.parse_args()
     res = run_all(transports=tuple(args.transports.split(",")),
-                  smoke=args.smoke)
+                  smoke=args.smoke,
+                  only=tuple(args.only.split(",")) if args.only else None)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=2)

@@ -80,6 +80,11 @@ class Handle:
         # target side: a pass_handle handler sets this before returning to
         # take ownership of responding later (event-driven response)
         self.deferred = False
+        # target side: caller's remaining deadline budget (header field) and
+        # local arrival time — admission control reads these via
+        # remaining_budget()
+        self.budget_ms: int = 0
+        self.arrived: float = 0.0
 
     def _release_payload(self) -> None:
         if self._payload_bulk is not None:
@@ -93,11 +98,21 @@ class Handle:
     def forward(self, input_value: Any, cb: Optional[Callback] = None,
                 timeout: Optional[float] = None, arg: Any = None) -> None:
         """Issue the RPC (non-blocking). ``cb`` fires from trigger() when the
-        response (or failure/timeout) is known."""
+        response (or failure/timeout) is known.
+
+        ``timeout`` doubles as the caller's *deadline budget*: it rides the
+        request header (``budget_ms``) so the target can make admission
+        decisions against the time the caller is actually willing to wait."""
         hg = self.hg
         ctx = self.info.context
         self.cookie = hg._cookie_counter.next()
         payload = hg_proc.encode(self.rpc.in_proc, input_value)
+        budget_ms = 0
+        if timeout is not None and timeout > 0:
+            # round sub-millisecond budgets UP to 1: 0 means "no
+            # deadline" on the wire, and a nearly-expired caller is the
+            # one admission control most needs to know about
+            budget_ms = min(max(int(timeout * 1e3), 1), 0xFFFFFFFF)
         flags = Flags.NONE
         crc = 0
         if hg.checksum_payloads:
@@ -129,11 +144,11 @@ class Handle:
             self._payload_bulk = BulkHandle(hg.na, [reg_buf],
                                             read=True, write=False)
             hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
-                                len(payload), crc)
+                                len(payload), crc, budget_ms)
             msg = (hdr.pack(), self._payload_bulk.descriptor().to_bytes())
         else:
             hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
-                                len(payload), crc)
+                                len(payload), crc, budget_ms)
             msg = (hdr.pack(), payload)   # vectored: no payload copy
 
         def complete(ret: Ret, output: Any = None):
@@ -219,6 +234,16 @@ class Handle:
             self.info.context.disarm(self._deadline_entry)
 
     # ------------------------------------------------------------------ target
+    def remaining_budget(self) -> Optional[float]:
+        """Seconds left of the caller's deadline budget (header
+        ``budget_ms`` minus the time this request has already spent on the
+        target), or ``None`` if the caller set no deadline.  Never
+        negative: an already-blown budget reads 0.0."""
+        if not self.budget_ms:
+            return None
+        return max(self.budget_ms / 1e3 - (time.monotonic() - self.arrived),
+                   0.0)
+
     def get_input(self) -> Any:
         if not self._input_decoded:
             self._input = hg_proc.decode(self.rpc.in_proc, self._input_raw)
@@ -390,6 +415,8 @@ class HGClass:
         handle = Handle(self, HandleInfo(source, hdr.rpc_id, self.context), info)
         handle.cookie = hdr.cookie
         handle._input_raw = body
+        handle.budget_ms = hdr.budget_ms
+        handle.arrived = time.monotonic()
 
         if (hdr.flags & Flags.CHECKSUM) and self.checksum_payloads and hdr.payload_len:
             if payload_crc32(body) != hdr.payload_crc:

@@ -13,7 +13,7 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-PROTOCOL_VERSION = 3
+PROTOCOL_VERSION = 4
 HEADER_MAGIC = 0x4D4A5250  # "MJRP"
 
 
@@ -33,6 +33,8 @@ class Ret(enum.IntEnum):
     AGAIN = 10
     PERMISSION = 11
     MSGSIZE = 12         # message exceeds the transport's eager limit
+    OVERLOAD = 13        # target shed the request (admission control):
+                         # it cannot finish within the caller's deadline
 
 
 class OpType(enum.IntEnum):
@@ -63,7 +65,8 @@ class ChecksumError(MercuryError):
 # --------------------------------------------------------------------------
 # Request: magic u32 | version u8 | flags u8 | pad u16 | rpc_id u64
 #          | cookie u64 | payload_len u32 | payload_crc u32
-_REQ = struct.Struct("<IBBHQQII")
+#          | budget_ms u32 (remaining deadline budget; 0 = unbounded)
+_REQ = struct.Struct("<IBBHQQIII")
 # Response: magic u32 | version u8 | ret u8 | pad u16 | cookie u64
 #           | payload_len u32 | payload_crc u32
 _RSP = struct.Struct("<IBBHQII")
@@ -86,21 +89,28 @@ class RequestHeader:
     flags: Flags = Flags.NONE
     payload_len: int = 0
     payload_crc: int = 0
+    # remaining deadline budget at send time, milliseconds; 0 = caller set
+    # no deadline.  Targets use it for admission control (shed with
+    # Ret.OVERLOAD when the estimated queue wait already exceeds it).
+    budget_ms: int = 0
 
     def pack(self) -> bytes:
         return _REQ.pack(
             HEADER_MAGIC, PROTOCOL_VERSION, int(self.flags), 0,
             self.rpc_id, self.cookie, self.payload_len, self.payload_crc,
+            self.budget_ms,
         )
 
     @staticmethod
     def unpack(buf: bytes | memoryview) -> "RequestHeader":
-        magic, ver, flags, _pad, rpc_id, cookie, plen, crc = _REQ.unpack_from(buf)
+        (magic, ver, flags, _pad, rpc_id, cookie, plen, crc,
+         budget_ms) = _REQ.unpack_from(buf)
         if magic != HEADER_MAGIC:
             raise MercuryError(Ret.PROTOCOL_ERROR, f"bad magic {magic:#x}")
         if ver != PROTOCOL_VERSION:
             raise MercuryError(Ret.PROTOCOL_ERROR, f"version {ver} != {PROTOCOL_VERSION}")
-        return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc)
+        return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc,
+                             budget_ms)
 
 
 @dataclass(frozen=True)

@@ -5,9 +5,9 @@ deadlines/retries/hedging, and credit-based flow control.
 See DESIGN.md §7 for the registry schema, the balancer contract and the
 credit/flow-control state machine.
 """
-from .balancer import (BALANCERS, Balancer, LeastLoaded, LocalityAware,
-                       RoundRobin, make_balancer)
-from .flow import CreditGate
+from .balancer import (BALANCERS, Balancer, EwmaWeighted, LeastLoaded,
+                       LocalityAware, RoundRobin, make_balancer)
+from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
                      NonRetryable, RetryPolicy, call_with_budget)
 from .pool import PoolError, Replica, ServicePool
@@ -16,7 +16,8 @@ from .registry import (RegistryClient, RegistryService, ServiceInstance,
 
 __all__ = [
     "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
-    "make_balancer", "CreditGate", "RetryPolicy", "call_with_budget",
+    "EwmaWeighted", "make_balancer", "CreditGate", "AdaptiveCreditGate",
+    "RetryPolicy", "call_with_budget",
     "FabricError", "DeadlineExceeded", "BudgetExhausted", "NonRetryable",
     "ServicePool", "PoolError", "Replica", "RegistryService",
     "RegistryClient", "ServiceInstance", "resolve_service_uris",

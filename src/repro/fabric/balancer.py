@@ -19,6 +19,15 @@ Balancers must be cheap and thread-safe — they run on every call.
   * ``locality``  cheapest transport tier first (self < sm < tcp — the
                   NotNets argument: keep co-located traffic off the
                   network stack), least-loaded within a tier
+  * ``weighted``  expected-wait ranking: ``ema_latency × (inflight + 1)
+                  / capacity`` — client-side EWMA latency (fed from
+                  ``Replica.record``) times queue occupancy (local
+                  in-flight + the server's piggybacked ``fab.report``
+                  load), normalized by capacity.  Unlike the strict
+                  tier/load sort this trades tiers off against observed
+                  speed, so a slow-but-local replica loses to a
+                  fast-but-remote one once the latency gap exceeds the
+                  transport gap
 """
 from __future__ import annotations
 
@@ -105,10 +114,38 @@ class LocalityAware(Balancer):
         return _rotate_ties(base, key, n)
 
 
+class EwmaWeighted(Balancer):
+    """Rank by expected wait: client-observed EWMA latency × occupancy
+    (local in-flight leads, the server's piggybacked load report trails)
+    / capacity.  Replicas with no latency sample yet rank *first* (their
+    score term is the set's minimum observed EWMA, occupancy-scaled), so
+    new/recovered replicas get probed instead of starved."""
+
+    def __init__(self):
+        self._counter = itertools.count()
+        self._lock = threading.Lock()
+
+    def rank(self, replicas):
+        if not replicas:
+            return []
+        sampled = [r.ema_latency for r in replicas if r.ema_latency > 0.0]
+        floor = min(sampled) if sampled else 1.0
+
+        def key(r):
+            lat = r.ema_latency if r.ema_latency > 0.0 else floor
+            occupancy = r.gate.inflight + max(r.load, 0.0) + 1.0
+            return lat * occupancy / max(r.capacity, 1)
+        base = sorted(replicas, key=lambda r: (key(r), r.iid))
+        with self._lock:
+            n = next(self._counter)
+        return _rotate_ties(base, key, n)
+
+
 BALANCERS: Dict[str, Type[Balancer]] = {
     "rr": RoundRobin,
     "least": LeastLoaded,
     "locality": LocalityAware,
+    "weighted": EwmaWeighted,
 }
 
 

@@ -72,6 +72,12 @@ class RetryPolicy:
     jitter: float = 0.5          # fraction of the backoff randomized away
     hedge_after: Optional[float] = None   # issue a 2nd replica's attempt
                                           # if no reply within this (s)
+    # errors that skip the backoff sleep entirely: an admission-control
+    # shed (OVERLOAD) is a sub-millisecond fast-fail whose remedy is a
+    # *different replica*, not a later retry against the same one —
+    # backing off would burn exactly the deadline budget the shed was
+    # protecting.  (The attempt budget still applies.)
+    fast_rets: frozenset = frozenset({Ret.OVERLOAD})
 
     def with_(self, **kw) -> "RetryPolicy":
         return replace(self, **kw)
@@ -114,6 +120,8 @@ def call_with_budget(policy: RetryPolicy, deadline: float,
             last = e
         if attempt + 1 >= policy.attempts:
             break
+        if getattr(last, "ret", None) in policy.fast_rets:
+            continue                  # fast failover: re-rank immediately
         pause = min(policy.backoff(attempt + 1, rand()),
                     max(deadline - clock(), 0.0))
         if pause > 0:

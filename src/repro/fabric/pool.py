@@ -19,10 +19,21 @@ reliability layer a single hard-coded URI cannot give:
     exponential backoff and count against a fixed attempt budget which
     *includes* hedge requests, and the losing side of a hedge is
     canceled at the transport;
-  * **credit-based flow control** — per-replica
-    :class:`~repro.fabric.flow.CreditGate`s bound in-flight requests so
-    a slow replica backpressures instead of queueing unboundedly, and
-    gate occupancy feeds back into the balancer's load signal.
+  * **credit-based flow control** — per-replica credit gates bound
+    in-flight requests so a slow replica backpressures instead of
+    queueing unboundedly, and gate occupancy feeds back into the
+    balancer's load signal.  By default the gates are **adaptive**
+    (:class:`~repro.fabric.flow.AdaptiveCreditGate`): each replica's
+    limit is grown/shrunk AIMD-style from its observed completion
+    latency, so fast replicas absorb more in-flight work and slow ones
+    backpressure sooner — ``adaptive_credits=False`` restores the fixed
+    ``credits_per_target`` behavior;
+  * **deadline-aware admission** — the caller's remaining deadline
+    budget rides the request header (``Engine.call_async(deadline=...)``
+    → ``RequestHeader.budget_ms``); a server that cannot finish in time
+    sheds with ``Ret.OVERLOAD``, which the pool treats as *retry on
+    another replica, immediately* (no backoff — see
+    ``RetryPolicy.fast_rets``).
 """
 from __future__ import annotations
 
@@ -36,19 +47,25 @@ from ..core.na.base import SCHEME_TIERS
 from ..core.na.multi import scheme_of as _scheme
 from ..core.types import MercuryError, Ret
 from .balancer import Balancer, make_balancer
-from .flow import CreditGate
+from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, NonRetryable,
                      RetryPolicy, call_with_budget)
 from .registry import RegistryClient
 
 # errors worth retrying on another replica: the request may never have
-# executed (or the transport lost the answer).  Application faults
-# (FAULT/NOENTRY/INVALID_ARG/...) are NOT retried: the handler ran.
+# executed (or the transport lost the answer — or, for OVERLOAD, the
+# target refused it untouched because it could not meet the deadline).
+# Application faults (FAULT/NOENTRY/INVALID_ARG/...) are NOT retried:
+# the handler ran.
 _RETRYABLE = {Ret.TIMEOUT, Ret.DISCONNECT, Ret.AGAIN, Ret.NOMEM,
-              Ret.CANCELED, Ret.PROTOCOL_ERROR, Ret.CHECKSUM_ERROR}
+              Ret.CANCELED, Ret.PROTOCOL_ERROR, Ret.CHECKSUM_ERROR,
+              Ret.OVERLOAD}
 # transport-level failures that indicate the *resolved tier* (not the
 # service) is bad — trigger tier demotion and a mark-down
 _TIER_FAULTS = {Ret.DISCONNECT, Ret.PROTOCOL_ERROR}
+# failures that are congestion signals for the adaptive credit gate: the
+# replica (not the transport tier, not the application) is struggling
+_CONGESTION = {Ret.TIMEOUT, Ret.AGAIN, Ret.OVERLOAD, Ret.DISCONNECT}
 
 
 class PoolError(MercuryError):
@@ -61,15 +78,20 @@ def _tier_sorted(uris: Sequence[str]) -> List[str]:
 
 class Replica:
     """The pool's cached view of one service instance: registry-reported
-    state + local routing state (resolved tier, credit gate, stats)."""
+    state + local routing state (resolved tier, credit gate, stats).
+
+    All mutable routing state (``addr``/``resolved_uri``/``bad_schemes``/
+    ``down_until``) is guarded by one reentrant lock — ``demote``,
+    ``reresolve`` and ``mark_down`` race freely from retry paths on
+    different caller threads, and each transition must be atomic."""
 
     def __init__(self, iid: str, uris: Sequence[str], capacity: int,
-                 load: float, credits: int):
+                 load: float, gate: CreditGate):
         self.iid = iid
         self.uris = _tier_sorted(uris)
         self.capacity = capacity
         self.load = load
-        self.gate = CreditGate(credits)
+        self.gate = gate
         self.bad_schemes: set = set()      # demoted tiers (this pool only)
         self.addr = None                   # resolved NAAddress
         self.resolved_uri: Optional[str] = None
@@ -77,7 +99,8 @@ class Replica:
         self.calls = 0
         self.errors = 0
         self.ema_latency = 0.0
-        self._lock = threading.Lock()
+        # reentrant: demote/reresolve re-enter resolve() under the lock
+        self._lock = threading.RLock()
 
     @property
     def tier(self) -> int:
@@ -107,7 +130,7 @@ class Replica:
             if self.resolved_uri is None:
                 return False
             self.bad_schemes.add(_scheme(self.resolved_uri))
-        return self.resolve(engine)
+            return self.resolve(engine)
 
     def reresolve(self, engine: Engine) -> bool:
         """Forget demotions and resolve from scratch — the recovery path
@@ -115,15 +138,18 @@ class Replica:
         forever; a tier that is still broken just demotes again)."""
         with self._lock:
             self.bad_schemes.clear()
-        self.down_until = 0.0
-        return self.resolve(engine)
+            self.down_until = 0.0
+            return self.resolve(engine)
 
     def mark_down(self, ttl: float) -> None:
-        self.down_until = time.monotonic() + ttl
+        with self._lock:
+            self.down_until = time.monotonic() + ttl
 
     @property
     def is_up(self) -> bool:
-        return self.addr is not None and time.monotonic() >= self.down_until
+        with self._lock:
+            return (self.addr is not None
+                    and time.monotonic() >= self.down_until)
 
     def record(self, dt: Optional[float], ok: bool) -> None:
         with self._lock:
@@ -133,6 +159,17 @@ class Replica:
             elif dt is not None:
                 self.ema_latency = (0.2 * dt + 0.8 * self.ema_latency
                                     if self.ema_latency else dt)
+        # feed the adaptive credit controller outside the routing lock
+        # (the gate has its own lock; no nesting, no ordering constraint)
+        if ok and dt is not None and isinstance(self.gate,
+                                                AdaptiveCreditGate):
+            self.gate.record_latency(dt)
+
+    def penalize(self) -> None:
+        """A congestion-class failure: multiplicative-decrease the
+        adaptive gate (no-op on fixed gates)."""
+        if isinstance(self.gate, AdaptiveCreditGate):
+            self.gate.record_failure()
 
     def stat(self) -> dict:
         return {"iid": self.iid, "uri": self.resolved_uri,
@@ -151,7 +188,11 @@ class ServicePool:
                  balancer: Balancer | str = "locality",
                  policy: Optional[RetryPolicy] = None,
                  credits_per_target: int = 8,
+                 adaptive_credits: bool = True,
+                 credit_min: int = 1, credit_max: int = 64,
+                 credit_target_latency: Optional[float] = None,
                  refresh_interval: float = 0.25,
+                 load_refresh_interval: float = 1.0,
                  default_timeout: float = 30.0,
                  down_ttl: float = 2.0):
         self.engine = engine
@@ -162,35 +203,63 @@ class ServicePool:
         self.balancer = make_balancer(balancer)
         self.policy = policy or RetryPolicy()
         self.credits_per_target = credits_per_target
+        self.adaptive_credits = adaptive_credits
+        self.credit_min = credit_min
+        self.credit_max = credit_max
+        self.credit_target_latency = credit_target_latency
         self.refresh_interval = refresh_interval
+        # piggybacked load/capacity reports do not bump the epoch, so a
+        # pure epoch poll would freeze them between membership changes;
+        # do a full resolve at least this often for the load-aware
+        # balancers (least / weighted)
+        self.load_refresh_interval = load_refresh_interval
         self.default_timeout = default_timeout
         self.down_ttl = down_ttl
         self._view: Dict[str, Replica] = {}
         self._view_epoch = -1
+        self._view_nonce: Optional[str] = None
         self._next_epoch_check = 0.0
+        self._next_load_refresh = 0.0
         self._view_lock = threading.Lock()
         self.refresh(force=True)
+
+    def _make_gate(self) -> CreditGate:
+        if not self.adaptive_credits:
+            return CreditGate(self.credits_per_target)
+        return AdaptiveCreditGate(
+            self.credits_per_target, min_credits=self.credit_min,
+            max_credits=self.credit_max,
+            target_latency=self.credit_target_latency)
 
     # -- view management -----------------------------------------------------
     def refresh(self, force: bool = False) -> None:
         """Bring the cached replica view up to date.  Rate-limited epoch
-        poll unless ``force``; full resolve only when the epoch moved."""
+        poll unless ``force``; full resolve when the epoch moved, the
+        registry's nonce changed (restart), or piggybacked load is due."""
         now = time.monotonic()
         with self._view_lock:
             if not force and now < self._next_epoch_check:
                 return
             self._next_epoch_check = now + self.refresh_interval
+            load_due = now >= self._next_load_refresh
         try:
-            if not force:
-                # cheap poll first; resolve only when the epoch moved
-                if self.registry.epoch() == self._view_epoch:
+            if not force and not load_due:
+                # cheap poll first; resolve only when something moved
+                epoch, nonce = self.registry.epoch_info()
+                if epoch == self._view_epoch and nonce == self._view_nonce:
                     return
             view = self.registry.resolve(self.service)
         except MercuryError:
             return                        # registry briefly unreachable
         with self._view_lock:
-            if view["epoch"] < self._view_epoch:
-                return                    # raced a newer refresh: keep it
+            nonce = view.get("nonce")
+            if nonce == self._view_nonce and view["epoch"] < self._view_epoch:
+                # raced a newer refresh *of the same registry run*: keep
+                # it.  A different nonce means the registry restarted and
+                # reset its epoch — that view is fresher, never stale.
+                return
+            self._next_load_refresh = (time.monotonic()
+                                       + self.load_refresh_interval)
             fresh: Dict[str, Replica] = {}
             for inst in view["instances"]:
                 old = self._view.get(inst["iid"])
@@ -208,11 +277,12 @@ class ServicePool:
                 else:
                     rep = Replica(inst["iid"], inst["uris"],
                                   inst["capacity"], inst["load"],
-                                  self.credits_per_target)
+                                  self._make_gate())
                     rep.resolve(self.engine)
                     fresh[inst["iid"]] = rep
             self._view = fresh
             self._view_epoch = view["epoch"]
+            self._view_nonce = nonce
         # unreachable-at-creation replicas get another chance each refresh
         for rep in fresh.values():
             if rep.addr is None:
@@ -361,6 +431,12 @@ class ServicePool:
         except BaseException:
             rep.gate.release()        # sync failure (e.g. MSGSIZE)
             raise
+        # latency samples must start at ISSUE time: measuring from the
+        # attempt start would fold our own credit-gate wait (and the
+        # hedge delay) into the replica's latency, and the adaptive gate
+        # would misread its own backpressure as server congestion — a
+        # positive-feedback collapse of the limit
+        fut.issued_at = time.monotonic()
         fut.add_done_callback(lambda _f: rep.gate.release())
         return fut
 
@@ -376,7 +452,13 @@ class ServicePool:
             now = time.monotonic()
             remaining = attempt_deadline - now
             if remaining <= 0 and pending:
-                raise RemoteError(Ret.TIMEOUT, f"{rpc}: attempt timed out")
+                # this wall-clock check usually beats the transport's own
+                # deadline timer: the hung replicas must still take the
+                # TIMEOUT congestion penalty and attempt-level exclusion
+                err = RemoteError(Ret.TIMEOUT, f"{rpc}: attempt timed out")
+                for f in pending:
+                    self._note_failure(owners[futs.index(f)], err, state)
+                raise err
             wait_for = remaining
             if (not hedged and policy.hedge_after is not None
                     and state["issued"] < policy.attempts):
@@ -389,7 +471,7 @@ class ServicePool:
                 rep = owners[futs.index(f)]
                 err = f.exception()
                 if err is None:
-                    rep.record(time.monotonic() - t_start, ok=True)
+                    rep.record(time.monotonic() - f.issued_at, ok=True)
                     state["winner"] = rep.iid
                     return f.result()
                 self._note_failure(rep, err, state)
@@ -422,6 +504,8 @@ class ServicePool:
         rep.record(None, ok=False)
         state["failed_iids"].add(rep.iid)
         ret = getattr(err, "ret", None)
+        if ret in _CONGESTION:
+            rep.penalize()                # adaptive gate: shrink the limit
         if ret in _TIER_FAULTS:
             # the resolved tier is broken (e.g. stale sm segment after a
             # replica restart): demote it; no fallback tier -> mark down

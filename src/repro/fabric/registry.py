@@ -20,10 +20,20 @@ Wire schema (all values plain pytree-of-scalars — see DESIGN.md §7):
                   -> {iid, epoch}
   fab.deregister  {service, iid} -> {ok, epoch}
   fab.report      {service, iid, load} -> {epoch}          (heartbeat too)
-  fab.resolve     {service} -> {epoch, instances: [{iid, uris, capacity,
-                                                    load, age}]}
+  fab.resolve     {service} -> {epoch, nonce, instances: [{iid, uris,
+                                                capacity, load, age}]}
   fab.services    {} -> {epoch, services: [name]}
-  fab.epoch       {} -> {epoch}
+  fab.epoch       {} -> {epoch, nonce}
+
+The **nonce** is a per-registry-process random id: epochs are only
+comparable within one nonce.  A restarted registry resets its epoch to 0,
+which a bare ``view.epoch < cached.epoch`` check would misread as a stale
+race forever; clients (ServicePool) detect the nonce change and resync
+instead.  Re-registering an existing ``iid`` with unchanged uris (the
+``ServiceInstance._report_loop`` recovery path) does **not** bump the
+epoch — membership did not change, and bumping would force full
+``fab.resolve`` storms across every pool each time an instance recovers
+from an expiry.
 """
 from __future__ import annotations
 
@@ -48,6 +58,9 @@ class RegistryService:
         # (service, iid) -> {uris, capacity, load, member_id, last}
         self.instances: Dict[Tuple[str, str], dict] = {}
         self.epoch = 0
+        # restart nonce: epochs are only comparable within one nonce (a
+        # restarted registry restarts at epoch 0 — see module docstring)
+        self.nonce = uuid.uuid4().hex[:12]
         self._lock = threading.Lock()
         self._stop = threading.Event()
         engine.register("fab.register", self._register)
@@ -72,6 +85,7 @@ class RegistryService:
             uris = parse_addr_set(uris)
         iid = req.get("iid") or uuid.uuid4().hex[:12]
         with self._lock:
+            prev = self.instances.get((service, iid))
             self.instances[(service, iid)] = {
                 "uris": list(uris),
                 "capacity": int(req.get("capacity", 0)),
@@ -79,7 +93,12 @@ class RegistryService:
                 "member_id": req.get("member_id"),
                 "last": time.monotonic(),
             }
-            self.epoch += 1
+            # membership changed only if the instance is new or moved to
+            # different addresses; a same-uris re-register (the report
+            # loop's recovery path) must NOT bump the epoch, or every
+            # recovery forces a fab.resolve storm across all pools
+            if prev is None or prev["uris"] != list(uris):
+                self.epoch += 1
             return {"iid": iid, "epoch": self.epoch}
 
     def _deregister(self, req):
@@ -111,7 +130,8 @@ class RegistryService:
                     "capacity": v["capacity"], "load": v["load"],
                     "age": now - v["last"]}
                    for (s, iid), v in self.instances.items() if s == service]
-            return {"epoch": self.epoch, "instances": out}
+            return {"epoch": self.epoch, "nonce": self.nonce,
+                    "instances": out}
 
     def _services(self, _req):
         with self._lock:
@@ -120,7 +140,7 @@ class RegistryService:
 
     def _epoch(self, _req):
         with self._lock:
-            return {"epoch": self.epoch}
+            return {"epoch": self.epoch, "nonce": self.nonce}
 
     # -- liveness ------------------------------------------------------------
     def _members_expired(self, member_ids: List[str]) -> None:
@@ -195,6 +215,13 @@ class RegistryClient:
     def epoch(self) -> int:
         return self.engine.call(self.registry, "fab.epoch", {},
                                 timeout=self.timeout)["epoch"]
+
+    def epoch_info(self) -> Tuple[int, Optional[str]]:
+        """(epoch, nonce) — the cheap staleness poll.  Epochs from
+        different nonces are not comparable (registry restarted)."""
+        out = self.engine.call(self.registry, "fab.epoch", {},
+                               timeout=self.timeout)
+        return out["epoch"], out.get("nonce")
 
 
 def resolve_service_uris(engine: Engine, registry_uri: str, service: str,

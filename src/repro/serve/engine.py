@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -37,6 +38,9 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     on_token: Optional[Callable[[int, int], None]] = None
+    # monotonic time of submit(); the gateway's AdmissionController
+    # measures its service-time EWMA from this stamp
+    t_submit: float = 0.0
     _done_cbs: List[Callable[[], None]] = field(default_factory=list)
     _cb_lock: threading.Lock = field(default_factory=threading.Lock)
 
@@ -115,6 +119,7 @@ class ServeEngine:
             rid = self._rid
         req = Request(rid, prompt, max_new,
                       temperature, eos_id, frontend, on_token=on_token)
+        req.t_submit = time.monotonic()
         self.queue.put(req)
         self.work.set()
         return req

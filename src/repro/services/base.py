@@ -1,6 +1,7 @@
 """Service substrate: pytree <-> named-buffer codecs shared by the
-checkpoint and datafeed services, plus the replicated-call straggler
-mitigation helper.
+checkpoint and datafeed services, the replicated-call straggler
+mitigation helper, and the deadline-aware admission controller shared by
+every server-side handler path.
 
 Every service node is just a :class:`repro.core.executor.Engine` — origin
 and target at once (paper C4); these helpers keep the services thin.
@@ -77,6 +78,91 @@ def verify_manifest(man: dict, named: Dict[str, np.ndarray]) -> None:
         if got != want:
             raise MercuryError(Ret.CHECKSUM_ERROR,
                                f"shard {k}: {got} != {want}")
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission control (server side)
+# ---------------------------------------------------------------------------
+class AdmissionController:
+    """Shed work a server cannot finish within the caller's deadline.
+
+    The caller's remaining deadline budget rides the request header
+    (``RequestHeader.budget_ms`` — see ``Handle.remaining_budget``).  The
+    server keeps an EWMA of observed per-request service time and
+    estimates the wait a newly admitted request would see from the
+    current backlog::
+
+        est = ema_service × (backlog ÷ parallelism) + ema_service
+
+    (queue-wait plus the request's own service time).  If ``est``
+    exceeds the caller's remaining budget the request is **shed** with
+    ``Ret.OVERLOAD`` before any work happens — a sub-millisecond
+    fast-fail the client pool retries on another replica immediately —
+    instead of burning queue capacity on a request whose answer nobody
+    will be waiting for.  Mercury's facility argument, mRPC's placement
+    argument: this policy lives in the RPC service layer, not in each
+    application.
+
+    Callers with no deadline (``budget is None``) are always admitted;
+    so is everything until ``min_samples`` completions have been
+    observed (no estimate yet — shedding on a guess is worse than
+    queueing).
+    """
+
+    def __init__(self, ewma_alpha: float = 0.2, min_samples: int = 3,
+                 safety: float = 1.0):
+        self.ewma_alpha = ewma_alpha
+        self.min_samples = min_samples
+        self.safety = safety      # >1.0 sheds earlier, <1.0 later
+        self.ema_service = 0.0    # seconds per request
+        self.samples = 0
+        self.admitted = 0
+        self.shed = 0
+        self._lock = threading.Lock()
+
+    def observe(self, service_s: float) -> None:
+        """Record one completed request's service time (admit→done)."""
+        if service_s < 0:
+            return
+        with self._lock:
+            a = self.ewma_alpha
+            self.ema_service = (service_s if not self.samples
+                                else a * service_s
+                                + (1 - a) * self.ema_service)
+            self.samples += 1
+
+    def estimate_wait(self, backlog: int, parallelism: int) -> float:
+        """Estimated completion time (queue-wait + service) for a new
+        request given ``backlog`` outstanding work items and
+        ``parallelism`` concurrent executors; 0.0 until enough samples."""
+        with self._lock:
+            if self.samples < self.min_samples:
+                return 0.0
+            waves = backlog / max(parallelism, 1)
+            return self.ema_service * (waves + 1.0)
+
+    def admit(self, budget: Optional[float], backlog: int,
+              parallelism: int) -> None:
+        """Raise ``MercuryError(Ret.OVERLOAD)`` if the request cannot be
+        finished within ``budget`` seconds; otherwise count it admitted.
+        ``budget=None`` (caller set no deadline) always admits."""
+        est = self.estimate_wait(backlog, parallelism)
+        with self._lock:
+            if (budget is not None and est * self.safety > budget):
+                self.shed += 1
+                raise MercuryError(
+                    Ret.OVERLOAD,
+                    f"estimated completion {est * 1e3:.0f}ms exceeds the "
+                    f"caller's remaining budget {budget * 1e3:.0f}ms "
+                    f"(backlog {backlog}, ema {self.ema_service * 1e3:.0f}"
+                    f"ms)")
+            self.admitted += 1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"ema_service_ms": self.ema_service * 1e3,
+                    "admission_samples": self.samples,
+                    "admitted": self.admitted, "shed": self.shed}
 
 
 # ---------------------------------------------------------------------------

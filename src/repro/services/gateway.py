@@ -16,13 +16,23 @@ RPCs:
                    the progress thread keeps spinning: exactly the
                    multithreaded-executor shim of paper C5)
   ``gen.stats``    → queue/slot utilization + load (the fabric's
-                   piggybacked balancing signal)
+                   piggybacked balancing signal) + admission stats
 
 A background thread drives ``ServeEngine.step()`` whenever work exists
 (woken by the engine's work event — no idle polling); with ``registry=``
 the gateway self-registers as an instance of service ``service`` and
 reports its load, making it routable through a
 :class:`~repro.fabric.pool.ServicePool`.
+
+**Deadline-aware admission control**: every submit path (``gen.submit``,
+``gen.submit_bulk``, ``gen.generate``) runs through a shared
+:class:`~repro.services.base.AdmissionController` first.  The caller's
+remaining deadline budget arrives in the request header
+(``Handle.remaining_budget``); if the gateway's backlog × EWMA service
+time says the request cannot finish in that budget, it is shed with
+``Ret.OVERLOAD`` *before* touching the serve queue — an overloaded
+server spends its capacity on requests that can still make their
+deadlines, and the client pool re-routes the shed ones immediately.
 """
 from __future__ import annotations
 
@@ -36,23 +46,28 @@ from ..core.bulk import BulkDescriptor
 from ..core.executor import Engine
 from ..core.types import Ret
 from ..serve.engine import Request, ServeEngine
+from .base import AdmissionController
 
 
 class ServingGateway:
     def __init__(self, engine: Engine, serve: ServeEngine,
                  registry: Optional[str] = None, service: str = "gen",
-                 report_interval: float = 0.5):
+                 report_interval: float = 0.5,
+                 admission: Optional[AdmissionController] = None,
+                 shed_enabled: bool = True):
         self.engine = engine
         self.serve = serve
         self.requests: Dict[int, Request] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self.steps = 0
-        engine.register("gen.submit", self._submit)
+        self.admission = admission or AdmissionController()
+        self.shed_enabled = shed_enabled
+        engine.register("gen.submit", self._submit, pass_handle=True)
         engine.register("gen.submit_bulk", self._submit_bulk,
                         pass_handle=True)
         engine.register("gen.result", self._result, pass_handle=True)
-        engine.register("gen.generate", self._generate)
+        engine.register("gen.generate", self._generate, pass_handle=True)
         engine.register("gen.stats", self._stats)
         self.instance = None
         if registry is not None:
@@ -70,8 +85,20 @@ class ServingGateway:
         s = self.serve.stats()
         return float(s["active_slots"] + s["queued"])
 
+    def _admit(self, handle) -> None:
+        """Deadline-aware admission: shed with ``Ret.OVERLOAD`` when the
+        backlog × EWMA service time says this request cannot finish
+        within the caller's remaining deadline budget."""
+        if not self.shed_enabled:
+            return
+        s = self.serve.stats()
+        self.admission.admit(handle.remaining_budget(),
+                             backlog=s["active_slots"] + s["queued"],
+                             parallelism=max(s["n_slots"], 1))
+
     def _enqueue(self, req_in) -> Request:
         fe = req_in.get("frontend")
+        t0 = time.monotonic()
         req = self.serve.submit(
             np.asarray(req_in["tokens"], np.int32),
             max_new=int(req_in.get("max_new", 32)),
@@ -80,14 +107,22 @@ class ServingGateway:
             frontend=None if fe is None else np.asarray(fe, np.float32))
         with self._lock:
             self.requests[req.rid] = req
+        # feed the admission EWMA from every completion, measured from
+        # the engine's own submit stamp when it provides one (works for
+        # any serve-engine implementation, model-backed or not)
+        t_in = req.t_submit or t0
+        req.add_done_callback(
+            lambda: self.admission.observe(time.monotonic() - t_in))
         return req
 
-    def _submit(self, req_in):
+    def _submit(self, req_in, handle):
+        self._admit(handle)
         return {"rid": self._enqueue(req_in).rid}
 
     def _submit_bulk(self, req_in, handle):
         """Zero-copy submit: pull the prompt from the caller's registered
         memory (cheapest-tier transport chosen by address resolution)."""
+        self._admit(handle)
         desc = BulkDescriptor.from_bytes(req_in["desc"])
         count = int(req_in.get("count", desc.size // 4))
         # count and the descriptor are client-controlled: never allocate
@@ -157,7 +192,8 @@ class ServingGateway:
 
         req.add_done_callback(on_done)
 
-    def _generate(self, req_in):
+    def _generate(self, req_in, handle):
+        self._admit(handle)
         req = self._enqueue(req_in)
         req.done_event.wait(float(req_in.get("timeout", 120.0)))
         with self._lock:
@@ -168,7 +204,7 @@ class ServingGateway:
     def _stats(self, _req):
         out = self.serve.stats()
         out.update(steps=self.steps, uris=self.engine.uri,
-                   load=self._load())
+                   load=self._load(), **self.admission.stats())
         return out
 
     def _loop(self):

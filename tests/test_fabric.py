@@ -1,8 +1,10 @@
 """Service fabric: registry lifecycle (register/resolve/epoch/TTL/member
-expiry), ServicePool routing (rr / least-loaded / locality), budgeted
-retries + deadlines + hedging, credit-based backpressure, replica-death
-failover, sm→tcp tier failover with cached-view demotion, graceful
-close() thread-join semantics, and the event-driven gen.result path."""
+expiry), ServicePool routing (rr / least-loaded / locality / weighted),
+budgeted retries + deadlines + hedging, credit-based backpressure +
+adaptive credits, deadline-aware admission control (Ret.OVERLOAD),
+replica-death failover, registry-restart resync (epoch nonce),
+sm→tcp tier failover with cached-view demotion, graceful close()
+thread-join semantics, and the event-driven gen.result path."""
 import queue
 import threading
 import time
@@ -12,9 +14,12 @@ import numpy as np
 import pytest
 
 from repro.core.executor import Engine, RemoteError
-from repro.fabric import (BudgetExhausted, RegistryClient, RegistryService,
-                          RetryPolicy, ServiceInstance, ServicePool,
+from repro.core.types import Ret
+from repro.fabric import (BudgetExhausted, CreditGate, EwmaWeighted,
+                          RegistryClient, RegistryService, RetryPolicy,
+                          ServiceInstance, ServicePool,
                           resolve_service_uris)
+from repro.fabric.pool import Replica
 from repro.serve.engine import Request
 from repro.services import MembershipServer, ServingGateway
 
@@ -331,6 +336,278 @@ def test_pool_recovers_replica_after_transient_outage(reg):
         assert ok                      # recovered, not tombstoned
         srv2.shutdown()
         rc.deregister("svc", iid)
+
+
+# ---------------------------------------------------------------------------
+# registry restart (epoch nonce), re-register epoch storms, replica locking
+# ---------------------------------------------------------------------------
+def test_reregister_same_uris_does_not_bump_epoch(reg):
+    """The ServiceInstance report-loop recovery path re-registers under
+    its old iid with unchanged uris; membership did not change, so the
+    epoch must not move (a bump forces fab.resolve storms in every
+    pool).  Changing the uris IS a membership change and must bump."""
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as cli_e:
+        cli = RegistryClient(cli_e, reg_e.uri)
+        iid = cli.register("svc", "tcp://127.0.0.1:1111", capacity=2)
+        e1 = cli.epoch()
+        for _ in range(5):     # recovery re-registers: same iid, same uris
+            cli.register("svc", "tcp://127.0.0.1:1111", capacity=2,
+                         iid=iid)
+        assert cli.epoch() == e1
+        # load/capacity still refreshed by the re-register
+        cli.register("svc", "tcp://127.0.0.1:1111", capacity=2, iid=iid,
+                     load=4.5)
+        assert cli.resolve("svc")["instances"][0]["load"] == 4.5
+        assert cli.epoch() == e1
+        # moved to a new address: that IS membership
+        cli.register("svc", "tcp://127.0.0.1:2222", capacity=2, iid=iid)
+        assert cli.epoch() == e1 + 1
+        cli.deregister("svc", iid)
+
+
+def test_pool_survives_registry_restart():
+    """Acceptance: a pool keeps routing through a registry kill/restart
+    (epoch resets to 0 under a fresh nonce) and converges to the fresh
+    view within one refresh interval instead of treating the reset epoch
+    as a stale race forever."""
+    reg_e = Engine("tcp://127.0.0.1:0")
+    reg_svc = RegistryService(reg_e)
+    port = int(reg_e.uri.rsplit(":", 1)[1])
+    srv = _echo_engine("a")
+    inst = ServiceInstance(srv, reg_e.uri, "svc", capacity=4,
+                           report_interval=0.1)
+    with srv, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        # pad the old registry's epoch well past anything the restarted
+        # (reset-to-0) registry will reach during the test
+        for i in range(5):
+            rc.register("pad", f"tcp://127.0.0.1:{2000 + i}")
+        pool = ServicePool(cli, reg_e.uri, "svc", refresh_interval=0.1,
+                           policy=RetryPolicy(attempts=3, rpc_timeout=2.0,
+                                              backoff_base=0.01))
+        old_epoch, old_nonce = pool.epoch, pool._view_nonce
+        assert old_epoch >= 6 and old_nonce is not None
+        assert pool.call("echo", 1, timeout=10.0)[0] == "a"
+
+        reg_svc.close()
+        reg_e.shutdown()               # registry dies
+        # stale cached view keeps the data path alive
+        assert pool.call("echo", 2, timeout=10.0)[0] == "a"
+
+        # restart on the SAME port: empty state, epoch 0, fresh nonce
+        reg_e2 = Engine(f"tcp://127.0.0.1:{port}")
+        reg_svc2 = RegistryService(reg_e2)
+        try:
+            # the instance's report loop re-registers itself (NOENTRY ->
+            # register); wait for the fresh registry to list it
+            deadline = time.time() + 10
+            rc2 = RegistryClient(cli, reg_e2.uri)
+            while time.time() < deadline:
+                if rc2.resolve("svc")["instances"]:
+                    break
+                time.sleep(0.05)
+            assert rc2.resolve("svc")["instances"], "instance never re-registered"
+            # pool must converge onto the fresh view (new nonce, LOWER
+            # epoch) within ~one refresh interval
+            deadline = time.time() + 5
+            while time.time() < deadline and pool._view_nonce == old_nonce:
+                pool.refresh()
+                time.sleep(0.02)
+            assert pool._view_nonce != old_nonce, \
+                "pool stuck on the dead registry's view"
+            assert pool.epoch < old_epoch          # reset accepted
+            assert pool.call("echo", 3, timeout=10.0)[0] == "a"
+        finally:
+            reg_svc2.close()
+            reg_e2.shutdown()
+    inst.close(deregister=False)
+
+
+def test_replica_mutators_are_race_free():
+    """demote / reresolve / mark_down / record hammered from many
+    threads: every transition atomic (the PR-3 locking fix), no replica
+    state torn, no exception escapes."""
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        srv.register("echo", lambda x: x)
+        rep = Replica("r1", [srv.uri], 4, 0.0, CreditGate(4))
+        assert rep.resolve(cli)
+        stop = time.monotonic() + 1.5
+        errors = []
+
+        def hammer(which):
+            try:
+                while time.monotonic() < stop:
+                    if which == 0:
+                        rep.demote(cli)
+                    elif which == 1:
+                        rep.reresolve(cli)
+                    elif which == 2:
+                        rep.mark_down(0.01)
+                        _ = rep.is_up
+                    else:
+                        rep.record(0.001, ok=True)
+                        rep.record(None, ok=False)
+            except Exception as e:     # noqa: BLE001 — surfaced below
+                errors.append(repr(e))
+
+        threads = [threading.Thread(target=hammer, args=(i % 4,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10)
+        assert not errors, errors
+        # post-storm state is coherent: recoverable and callable
+        assert rep.reresolve(cli)
+        assert rep.is_up
+
+
+# ---------------------------------------------------------------------------
+# weighted balancing + adaptive credits
+# ---------------------------------------------------------------------------
+def _fake_rep(iid, ema, inflight, load=0.0, capacity=1):
+    rep = Replica(iid, [f"tcp://127.0.0.1:{9000 + hash(iid) % 100}"],
+                  capacity, load, CreditGate(max(inflight, 1) + 1))
+    rep.ema_latency = ema
+    for _ in range(inflight):
+        rep.gate.try_acquire()
+    return rep
+
+
+def test_weighted_balancer_ranks_by_expected_wait():
+    b = EwmaWeighted()
+    fast_idle = _fake_rep("fast", 0.01, 0)
+    fast_busy = _fake_rep("busy", 0.01, 3)
+    slow_idle = _fake_rep("slow", 0.10, 0)
+    ranked = b.rank([slow_idle, fast_busy, fast_idle])
+    assert ranked[0] is fast_idle
+    # 10ms x 4 in flight beats 100ms idle: the busy-fast replica still
+    # wins over the slow one (0.04 < 0.10 expected wait)
+    assert ranked[1] is fast_busy and ranked[2] is slow_idle
+    # capacity normalizes: same latency+occupancy, 4x capacity -> first
+    big = _fake_rep("big", 0.10, 0, capacity=4)
+    assert b.rank([slow_idle, big])[0] is big
+    # piggybacked server load counts even with zero local in-flight
+    loaded = _fake_rep("loaded", 0.01, 0, load=9.0)
+    assert b.rank([loaded, fast_idle])[0] is fast_idle
+
+
+def test_weighted_balancer_probes_unsampled_replicas():
+    """A replica with no latency sample must rank with the best observed
+    EWMA (occupancy-scaled), not sink to the bottom — otherwise a
+    recovered replica is never probed and never gets a sample."""
+    b = EwmaWeighted()
+    sampled = _fake_rep("sampled", 0.05, 2)
+    unsampled = _fake_rep("new", 0.0, 0)
+    assert b.rank([sampled, unsampled])[0] is unsampled
+
+
+def test_pool_adaptive_credits_grow_on_fast_replica(reg):
+    """Default pool gates are adaptive: completions under the latency
+    target grow the limit past the initial credits_per_target.  The
+    target is pinned explicitly — every completion counts as fast — so
+    the test exercises the record->gate->growth wiring, not the latency
+    jitter of a loaded CI box (the control law itself is pinned by
+    tests/test_fabric_flow.py)."""
+    reg_e, _ = reg
+    srv = _echo_engine("a")
+    with srv, Engine("tcp://127.0.0.1:0") as cli:
+        rc = RegistryClient(cli, reg_e.uri)
+        iid = rc.register("svc", srv.uri, capacity=4)
+        pool = ServicePool(cli, reg_e.uri, "svc", credits_per_target=2,
+                           credit_max=16, credit_target_latency=30.0)
+        for i in range(40):
+            assert pool.call("echo", i, timeout=10.0)[0] == "a"
+        st = pool.stats()["replicas"][0]
+        assert st["limit"] > 2 and st["grown"] >= 1
+        assert st["credits"] <= 16
+        rc.deregister("svc", iid)
+
+
+# ---------------------------------------------------------------------------
+# deadline budget propagation + admission control (Ret.OVERLOAD)
+# ---------------------------------------------------------------------------
+def test_deadline_budget_rides_request_header():
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        seen = {}
+
+        def probe(_x, handle):
+            seen["budget"] = handle.remaining_budget()
+            return "ok"
+        srv.register("probe", probe, pass_handle=True)
+        assert cli.call(srv.uri, "probe", None, timeout=5.0) == "ok"
+        assert 4.0 < seen["budget"] <= 5.0
+        # deadline= form propagates the *remaining* budget
+        assert cli.call(srv.uri, "probe", None,
+                        deadline=time.monotonic() + 2.0) == "ok"
+        assert 1.0 < seen["budget"] <= 2.0
+        # no timeout -> no budget -> admission never sheds
+        fut = cli.call_async(srv.uri, "probe", None, timeout=None)
+        assert fut.result(10.0) == "ok"
+        assert seen["budget"] is None
+
+
+def test_gateway_sheds_overload_fast(reg):
+    """A gateway whose backlog x EWMA service time exceeds the caller's
+    budget sheds with Ret.OVERLOAD in sub-RPC time instead of queueing
+    doomed work; generous budgets are still admitted."""
+    reg_e, _ = reg
+    serve = FakeServe()
+    with Engine("tcp://127.0.0.1:0") as srv, \
+            Engine("tcp://127.0.0.1:0") as cli:
+        gw = ServingGateway(srv, serve)
+        for _ in range(3):             # past min_samples: 500ms/request
+            gw.admission.observe(0.5)
+        t0 = time.monotonic()
+        with pytest.raises(RemoteError) as ei:
+            cli.call(srv.uri, "gen.submit", {"tokens": [1]}, timeout=0.2)
+        assert ei.value.ret == Ret.OVERLOAD
+        assert time.monotonic() - t0 < 0.19, "shed must be a fast-fail"
+        # same request with headroom is admitted
+        out = cli.call(srv.uri, "gen.submit", {"tokens": [1]}, timeout=5.0)
+        assert "rid" in out
+        st = cli.call(srv.uri, "gen.stats", {}, timeout=5.0)
+        assert st["shed"] == 1 and st["admitted"] >= 1
+        gw.close()
+
+
+def test_pool_reroutes_overload_to_other_replica(reg):
+    """OVERLOAD is retryable-on-another-replica with NO backoff: a pool
+    facing one overloaded and one healthy gateway completes every call
+    on the healthy one, within the original deadline."""
+    reg_e, _ = reg
+    slow_serve, fast_serve = FakeServe(), FakeServe()
+    engines = [Engine("tcp://127.0.0.1:0") for _ in range(2)]
+    gws = [ServingGateway(engines[0], slow_serve, registry=reg_e.uri,
+                          service="gen", report_interval=0.1),
+           ServingGateway(engines[1], fast_serve, registry=reg_e.uri,
+                          service="gen", report_interval=0.1)]
+    for _ in range(3):                 # replica 0 "takes 30s per request"
+        gws[0].admission.observe(30.0)
+    with Engine("tcp://127.0.0.1:0") as cli:
+        pool = ServicePool(cli, reg_e.uri, "gen", balancer="rr",
+                           refresh_interval=0.1,
+                           policy=RetryPolicy(attempts=3, rpc_timeout=5.0,
+                                              backoff_base=0.2))
+        assert len(pool.replicas()) == 2
+        t0 = time.monotonic()
+        outs = [pool.call("gen.generate", {"tokens": [1], "max_new": 2},
+                          timeout=5.0) for _ in range(6)]
+        dt = time.monotonic() - t0
+        assert all(o["done"] for o in outs)
+        # rr alternates, so ~3 calls hit the overloaded replica first and
+        # were shed + rerouted; fast_rets skips the 0.2s backoff, so the
+        # whole batch finishes far inside the per-call deadline
+        shed = cli.call(engines[0].uri, "gen.stats", {},
+                        timeout=5.0)["shed"]
+        assert shed >= 1
+        assert dt < 5.0, dt
+    for gw, e in zip(gws, engines):
+        gw.close()
+        e.shutdown()
 
 
 # ---------------------------------------------------------------------------

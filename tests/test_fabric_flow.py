@@ -1,0 +1,154 @@
+"""Property tests for the credit gates (fixed + adaptive).
+
+The adaptive-credit invariants pinned here (DESIGN.md §7):
+
+  * the limit never leaves ``[min_credits, max_credits]``, whatever
+    latency schedule / failure pattern the controller sees;
+  * credit conservation: every release had a matching acquire and
+    ``inflight == acquired - released`` at all times — including under
+    hedge-cancel storms (concurrent acquires racing releases racing
+    limit changes), and including when the limit shrinks below the
+    in-flight count;
+  * the control law moves the right way: consistently-fast completions
+    grow the limit, consistently-slow ones (or hard failures) shrink it.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from proptest import cases
+from repro.fabric.flow import AdaptiveCreditGate, CreditGate
+
+
+def test_fixed_gate_basics():
+    g = CreditGate(2)
+    assert g.try_acquire() and g.try_acquire()
+    assert not g.try_acquire()
+    assert g.inflight == 2 and g.available == 0
+    g.release()
+    assert g.try_acquire()
+    g.release(), g.release()
+    assert g.inflight == 0
+    with pytest.raises(RuntimeError):
+        g.release()                     # over-release is a bug, loudly
+
+
+def test_adaptive_gate_grows_when_fast_shrinks_when_slow():
+    g = AdaptiveCreditGate(4, min_credits=2, max_credits=32,
+                           target_latency=0.1)
+    for _ in range(200):                # far below target: additive growth
+        g.record_latency(0.01)
+    grown = g.credits
+    assert grown > 4
+    assert g.stats()["grown"] > 0
+    # now the replica degrades: multiplicative decrease (rate-limited to
+    # one shrink per EWMA window — feed spaced timestamps)
+    t = 1000.0
+    for i in range(64):
+        t += 10.0
+        g.record_latency(5.0, now=t)
+    assert g.credits < grown
+    assert g.credits >= 2               # never below min
+    for i in range(64):
+        t += 10.0
+        g.record_failure(now=t)
+    assert g.credits == 2               # floor holds
+
+
+def test_adaptive_gate_auto_target_learns_base_latency():
+    """No explicit target: the decaying-min base × headroom is the
+    target, so a uniformly-fast replica still grows."""
+    g = AdaptiveCreditGate(2, max_credits=16)   # target_latency=None
+    for _ in range(100):
+        g.record_latency(0.02)          # flat latency == base -> "fast"
+    assert g.credits > 2
+    st = g.stats()
+    assert st["target_ms"] == pytest.approx(st["ema_ms"] * 2.0, rel=0.2)
+
+
+def test_shrink_below_inflight_strands_nothing():
+    """Limit dropping under the in-flight count must not break release
+    accounting, and new acquires wait until occupancy drains."""
+    g = AdaptiveCreditGate(8, min_credits=1, max_credits=8,
+                           target_latency=0.01)
+    for _ in range(8):
+        assert g.try_acquire()
+    t = 1000.0
+    for i in range(32):                 # collapse the limit to 1
+        t += 10.0
+        g.record_failure(now=t)
+    assert g.credits == 1 and g.inflight == 8
+    assert not g.try_acquire()          # over the (new) limit
+    for _ in range(8):
+        g.release()                     # all in-flight still release fine
+    assert g.inflight == 0
+    assert g.try_acquire()              # and the single credit works
+    g.release()
+    st = g.stats()
+    assert st["acquired"] == st["released"] == 9
+
+
+@cases(n=30, seed=101)
+def test_adaptive_limit_bounds_invariant(rng):
+    """Random latency/failure schedule: the limit never leaves
+    [min_credits, max_credits]."""
+    lo = int(rng.integers(1, 4))
+    hi = int(rng.integers(lo, lo + 12))
+    g = AdaptiveCreditGate(int(rng.integers(lo, hi + 1)),
+                           min_credits=lo, max_credits=hi,
+                           target_latency=float(rng.uniform(0.01, 0.5)),
+                           decrease=float(rng.uniform(0.3, 0.9)))
+    t = 0.0
+    for _ in range(400):
+        t += float(rng.uniform(0.0, 1.0))
+        if rng.random() < 0.2:
+            g.record_failure(now=t)
+        else:
+            g.record_latency(float(rng.uniform(0.001, 1.0)), now=t)
+        assert lo <= g.credits <= hi
+        limit = g.stats()["limit"]
+        assert lo - 1e-9 <= limit <= hi + 1e-9
+
+
+@cases(n=8, seed=202)
+def test_hedge_cancel_storm_conserves_credits(rng):
+    """Hedge-cancel storm: many threads acquire, randomly 'cancel'
+    (release immediately) or 'complete' (feed a latency then release),
+    while the latency feed itself keeps moving the limit.  Total
+    releases must equal total acquires and the gate must end empty."""
+    g = AdaptiveCreditGate(int(rng.integers(2, 6)), min_credits=1,
+                           max_credits=int(rng.integers(8, 24)),
+                           target_latency=0.05)
+    n_threads = int(rng.integers(3, 8))
+    per_thread = 60
+    seeds = [int(rng.integers(0, 2**31)) for _ in range(n_threads)]
+    errors = []
+
+    def storm(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for _ in range(per_thread):
+                if not g.acquire(timeout=5.0):
+                    errors.append("acquire timed out")
+                    return
+                if r.random() < 0.5:
+                    # hedge loser: canceled, no latency sample
+                    g.release()
+                else:
+                    # winner: latency feeds the controller, then release
+                    g.record_latency(float(r.uniform(0.001, 0.2)))
+                    g.release()
+        except Exception as e:          # noqa: BLE001 — surfaced below
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=storm, args=(s,)) for s in seeds]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors, errors
+    st = g.stats()
+    assert st["acquired"] == st["released"] == n_threads * per_thread
+    assert st["inflight"] == 0 and g.inflight == 0
+    assert g.min_credits <= g.credits <= g.max_credits
