@@ -1,22 +1,33 @@
 """Service fabric end-to-end: one client drives THREE gateway replicas
-through a registry-backed ServicePool — locality-tiered routing (sm
+through a ServicePool backed by a THREE-replica registry quorum.  Four
+acts (see examples/README.md for the walkthrough):
+
+**Act one — steady state + replica kill**: locality-tiered routing (sm
 where reachable, tcp otherwise), least-loaded balancing from piggybacked
-stats, credit-based flow control, and mid-run failover: one replica is
+stats, credit-based flow control, and mid-run failover: one gateway is
 killed abruptly while requests are in flight; the registry's TTL sweep
 bumps the epoch, the pool reroutes, and the client sees every request
 complete (budgeted retries absorb the loss).
 
-Act two is an **overload scenario**: the surviving replicas are flooded
-with more deadlined work than their slots can serve.  Deadline-aware
+**Act two — overload shed**: the surviving replicas are flooded with
+more deadlined work than their slots can serve.  Deadline-aware
 admission control sheds the excess with ``Ret.OVERLOAD`` *before* it
 burns a slot (the pool reroutes sheds immediately — no backoff), so the
 capacity that exists is spent on requests that can still meet their
 deadlines instead of on a queue of doomed ones.
 
+**Act three — registry failover**: the registry *leaseholder* is killed
+abruptly.  Routed traffic keeps flowing (the pool's registry client
+rotates to a surviving replica, which serves reads from its mirrored
+view); after the lease expires the next-ranked replica takes over and
+the pool resyncs onto its fresh epoch stream — the control plane is no
+longer a single point of failure (DESIGN.md §8).
+
     PYTHONPATH=src python examples/fabric_serve.py
 """
 import concurrent.futures as cf
 import sys
+import threading
 import time
 import uuid
 
@@ -43,19 +54,26 @@ def main():
     params, _ = unzip(model.init(jax.random.PRNGKey(0)))
     tag = uuid.uuid4().hex[:6]
 
-    # ---- control plane ---------------------------------------------------
-    reg_engine = Engine("tcp://127.0.0.1:0")
-    registry = RegistryService(reg_engine, instance_ttl=1.5,
-                               sweep_interval=0.25)
-    print(f"[registry] {reg_engine.uri}")
+    # ---- control plane: a 3-replica registry quorum ----------------------
+    reg_engines = [Engine("tcp://127.0.0.1:0") for _ in range(3)]
+    reg_peers = [e.uri for e in reg_engines]
+    registries = [RegistryService(e, peers=reg_peers, lease_ttl=0.75,
+                                  gossip_interval=0.2, instance_ttl=1.5,
+                                  sweep_interval=0.25)
+                  for e in reg_engines]
+    while not registries[0].is_leader:      # cold start: rank 0 elects
+        time.sleep(0.05)                    # after one boot-grace lease
+    print(f"[registry] quorum of {len(reg_peers)}, "
+          f"leaseholder {reg_peers[0]}")
 
     # ---- three gateway replicas (sm+tcp address sets: a co-located
-    # client resolves the cheap shared-memory tier) ------------------------
+    # client resolves the cheap shared-memory tier).  Registration and
+    # heartbeats go to the whole quorum address set and fail over. -------
     replicas = []
     for i in range(N_REPLICAS):
         eng = Engine([f"sm://fab-rep{i}-{tag}", "tcp://127.0.0.1:0"])
         serve = ServeEngine(model, params, max_len=64, n_slots=2)
-        gw = ServingGateway(eng, serve, registry=reg_engine.uri,
+        gw = ServingGateway(eng, serve, registry=",".join(reg_peers),
                             service="gen", report_interval=0.25)
         replicas.append((eng, gw))
         print(f"[replica {i}] {eng.uri}")
@@ -63,7 +81,7 @@ def main():
     # ---- client ----------------------------------------------------------
     rng = np.random.default_rng(0)
     with Engine([f"sm://fab-cli-{tag}", "tcp://127.0.0.1:0"]) as client:
-        pool = ServicePool(client, reg_engine.uri, "gen",
+        pool = ServicePool(client, reg_peers, "gen",
                            balancer="locality",
                            policy=RetryPolicy(attempts=4, rpc_timeout=60.0,
                                               backoff_base=0.05),
@@ -140,16 +158,17 @@ def main():
 
         # flood the two survivors (2 slots each) with deadlined work well
         # beyond the drain rate.  The budget must clear the *servers'*
-        # believed service time (their admission EWMA — possibly still
-        # decaying from the compile-heavy act one) by ~1.5x so an
-        # empty-queue request is admitted, but only ~1.5x, so anything
-        # behind a queue is shed before it burns a slot; the svc term +
-        # fixed allowance covers client-side fan-out overhead
+        # believed service time (their admission EWMA — pure
+        # slot-occupancy time, so no queue-wait inflation) by ~2x so an
+        # empty-queue request is admitted, but stay far below the time
+        # the full flood needs to drain, so anything behind a deep queue
+        # is shed before it burns a slot; the svc term + fixed allowance
+        # covers client-side fan-out overhead
         emas = [s["ema_service_ms"] / 1e3
                 for s in pool.call_each("gen.stats", timeout=30.0).values()
                 if isinstance(s, dict)]
         ema_s = max(emas) if emas else svc_s
-        deadline_s = max(svc_s * 2.5, ema_s * 1.5) + 0.1
+        deadline_s = max(svc_s * 3.0, ema_s * 2.0) + 0.1
         n_flood = 48
         print(f"[overload] flooding {n_flood} requests, deadline "
               f"{deadline_s * 1e3:.0f}ms (measured service "
@@ -187,16 +206,69 @@ def main():
                  f"no doomed request held a slot" if miss_lat
                  else " (machine outran the flood)"))
         # the point of admission control: the flood resolves fast — work
-        # either completed in-deadline or was shed/failed within ~a
-        # deadline of its issue, never parked on a queue it can't survive
-        assert ok >= 1 or server_shed >= 1
+        # either completed in-deadline, was shed server-side before
+        # burning a slot, or was backpressured at the client's credit
+        # gates; nothing parked on a queue it couldn't survive
+        gate_rejects = sum(r.get("rejected", 0)
+                           for r in pool.stats()["replicas"])
+        assert ok >= 1 or server_shed >= 1 or gate_rejects >= 1
         assert not miss_lat or miss_lat[-1] < deadline_s * 3
+
+        # ---- act three: registry failover --------------------------------
+        # kill the leaseholder abruptly: no goodbye, its peers learn via
+        # lease expiry.  Routed traffic must keep flowing throughout —
+        # the pool's registry client rotates to a surviving replica,
+        # which serves resolution from its gossip-mirrored view.
+        leader_idx = next(i for i, r in enumerate(registries)
+                          if r.is_leader)
+        registries[leader_idx].close()
+        reg_engines[leader_idx].shutdown()
+        t_kill = time.monotonic()
+        print(f"[chaos] killed registry leaseholder "
+              f"{reg_peers[leader_idx]}")
+        survivors = [r for i, r in enumerate(registries)
+                     if i != leader_idx]
+        takeover = {}
+
+        def watch_lease():                 # timestamp the lease handoff
+            while not any(r.is_leader for r in survivors):
+                time.sleep(0.02)
+            takeover["ms"] = (time.monotonic() - t_kill) * 1e3
+
+        watcher = threading.Thread(target=watch_lease)
+        watcher.start()
+        fails = 0
+        for i in range(8):                 # through kill + takeover
+            try:
+                out = pool.call("gen.generate",
+                                {"tokens": rng.integers(
+                                    1, cfg.vocab, size=4).tolist(),
+                                 "max_new": MAX_NEW}, timeout=60.0)
+                assert out["done"]
+            except Exception:
+                fails += 1
+            time.sleep(0.15)
+        watcher.join()
+        takeover_ms = takeover["ms"]
+        new_leader = next(r for r in survivors if r.is_leader)
+        pool.refresh(force=True)
+        status = pool.registry.status()
+        print(f"[registry] lease moved to {new_leader.self_uri} in "
+              f"{takeover_ms:.0f}ms (new epoch stream "
+              f"{new_leader.nonce[:6]}…); pool resolved via "
+              f"{status['self']} ({status['role']})")
+        print(f"[client] {8 - fails}/8 requests completed across the "
+              f"control-plane kill ({fails} failures)")
+        assert fails == 0, "registry failover must be client-invisible"
+        assert len(pool.replicas()) == N_REPLICAS - 1   # view survived
 
     for eng, gw in replicas:
         gw.stop()
         eng.shutdown()
-    registry.close()
-    reg_engine.shutdown()
+    for i, r in enumerate(registries):
+        if i != leader_idx:
+            r.close()
+            reg_engines[i].shutdown()
     print("[fabric_serve] OK")
 
 

@@ -1,9 +1,11 @@
 """Service fabric (paper §"extreme-scale services"): registry-backed
 service pools with load-balanced, locality-aware routing, per-call
-deadlines/retries/hedging, and credit-based flow control.
+deadlines/retries/hedging, credit-based flow control, and a replicated
+(leader-leased, gossip-synced) registry control plane.
 
 See DESIGN.md §7 for the registry schema, the balancer contract and the
-credit/flow-control state machine.
+credit/flow-control state machine, and §8 for the replication protocol;
+docs/OPERATIONS.md is the operator's guide.
 """
 from .balancer import (BALANCERS, Balancer, EwmaWeighted, LeastLoaded,
                        LocalityAware, RoundRobin, make_balancer)
@@ -13,6 +15,7 @@ from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
 from .pool import PoolError, Replica, ServicePool
 from .registry import (RegistryClient, RegistryService, ServiceInstance,
                        resolve_service_uris)
+from .replication import PeerTracker, parse_registry_uris
 
 __all__ = [
     "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
@@ -21,4 +24,5 @@ __all__ = [
     "FabricError", "DeadlineExceeded", "BudgetExhausted", "NonRetryable",
     "ServicePool", "PoolError", "Replica", "RegistryService",
     "RegistryClient", "ServiceInstance", "resolve_service_uris",
+    "PeerTracker", "parse_registry_uris",
 ]

@@ -33,7 +33,14 @@ reliability layer a single hard-coded URI cannot give:
     → ``RequestHeader.budget_ms``); a server that cannot finish in time
     sheds with ``Ret.OVERLOAD``, which the pool treats as *retry on
     another replica, immediately* (no backoff — see
-    ``RetryPolicy.fast_rets``).
+    ``RetryPolicy.fast_rets``);
+  * **replicated control plane** — ``registry_uri`` may name the whole
+    registry replica set (list, or one comma-separated string); the
+    pool's :class:`~repro.fabric.registry.RegistryClient` sticks to the
+    replica that last answered and rotates on dead-peer detection, so a
+    registry-leader kill costs at most one failed control-plane RPC —
+    never a data-path error (stale cached views keep routing, and the
+    post-failover nonce change triggers a full resync; DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -184,7 +191,7 @@ class ServicePool:
     """Resolve ``service`` via the registry and route calls across its
     replicas.  Thread-safe: many caller threads may ``call`` at once."""
 
-    def __init__(self, engine: Engine, registry_uri: str, service: str,
+    def __init__(self, engine: Engine, registry_uri, service: str,
                  balancer: Balancer | str = "locality",
                  policy: Optional[RetryPolicy] = None,
                  credits_per_target: int = 8,
@@ -198,7 +205,8 @@ class ServicePool:
         self.engine = engine
         self.service = service
         # short control-plane timeout: a dead registry must not stall the
-        # data path (stale cached views keep routing)
+        # data path (stale cached views keep routing).  registry_uri may
+        # be the whole replica set; the client fails over between them.
         self.registry = RegistryClient(engine, registry_uri, timeout=2.0)
         self.balancer = make_balancer(balancer)
         self.policy = policy or RetryPolicy()

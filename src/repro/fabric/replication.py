@@ -1,0 +1,138 @@
+"""Replication machinery for the registry control plane.
+
+The replicated registry (DESIGN.md §8) runs N :class:`RegistryService`
+instances over a **static, ordered peer list** shared by every node —
+list order *is* leadership priority.  This module holds the pure
+bookkeeping half of the protocol:
+
+  * :class:`PeerTracker` — deterministic leader-lease state.  A peer is
+    *live* while it was heard from within ``lease_ttl`` seconds; the
+    leader is the live peer with the lowest rank.  Liveness starts
+    optimistic (every peer is assumed alive at boot) so a restarting
+    replica never steals leadership before the incumbent's lease had a
+    chance to renew, and a **boot grace** window defers self-election
+    until the newcomer has either adopted a snapshot from an acting
+    leader or waited a full lease out — a restarted rank-0 replica
+    therefore *resyncs before it leads* instead of resurrecting with an
+    empty table.
+  * :func:`parse_registry_uris` — the registry *address set* parser
+    shared by :class:`~repro.fabric.registry.RegistryClient` and the
+    launchers: one endpoint per replica, comma-separated (each endpoint
+    may itself be a ``;``-joined multi-transport address set, see
+    DESIGN.md §2).
+
+The wire half (``fab.gossip`` push/pull, write proxying, snapshot
+adoption) lives in :mod:`repro.fabric.registry`, which drives this
+tracker from its gossip loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Sequence
+
+
+def parse_registry_uris(spec) -> List[str]:
+    """Parse a registry address set: a sequence of endpoint URIs, or one
+    comma-separated string (``"tcp://a:7700,tcp://b:7700"``).  Each
+    endpoint may itself be a ``;``-joined multi-transport address set.
+
+    >>> parse_registry_uris("tcp://a:7700, tcp://b:7700")
+    ['tcp://a:7700', 'tcp://b:7700']
+    >>> parse_registry_uris(["sm://reg0;tcp://a:7700"])
+    ['sm://reg0;tcp://a:7700']
+    """
+    if isinstance(spec, str):
+        parts = [p.strip() for p in spec.split(",")]
+    else:
+        parts = [str(p).strip() for p in spec]
+    uris = [p for p in parts if p]
+    if not uris:
+        raise ValueError(f"empty registry address set: {spec!r}")
+    return uris
+
+
+class PeerTracker:
+    """Deterministic leader-lease state over a static ordered peer list.
+
+    Thread-safe; all times come from the injected ``clock`` (monotonic)
+    so tests can drive the lease deterministically.
+    """
+
+    def __init__(self, peers: Sequence[str], self_uri: str,
+                 lease_ttl: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        peers = list(peers)
+        if self_uri not in peers:
+            raise ValueError(f"self_uri {self_uri!r} is not in the peer "
+                             f"list {peers!r} — every replica must be "
+                             f"started with the same ordered --peers list "
+                             f"and its own entry as --listen/--self")
+        if len(set(peers)) != len(peers):
+            raise ValueError(f"duplicate entries in peer list {peers!r}")
+        self.peers = peers
+        self.self_uri = self_uri
+        self.rank: Dict[str, int] = {u: i for i, u in enumerate(peers)}
+        self.lease_ttl = lease_ttl
+        self._clock = clock
+        now = clock()
+        # optimistic start: assume everyone is alive until a full lease
+        # passes without contact (prevents takeover storms at boot)
+        self._last_heard: Dict[str, float] = {
+            u: now for u in peers if u != self_uri}
+        # boot grace: do not self-elect until we either adopted a
+        # snapshot from an acting leader or waited one lease out
+        self._boot_until = now + lease_ttl
+        self._synced = False
+        self._lock = threading.Lock()
+
+    # -- liveness ------------------------------------------------------------
+    def note(self, uri: str) -> None:
+        """Record contact with ``uri`` (either direction of gossip)."""
+        with self._lock:
+            if uri in self._last_heard:
+                self._last_heard[uri] = self._clock()
+
+    def mark_synced(self) -> None:
+        """We adopted an acting leader's snapshot: boot grace is over."""
+        with self._lock:
+            self._synced = True
+
+    def in_grace(self) -> bool:
+        with self._lock:
+            return not self._synced and self._clock() < self._boot_until
+
+    def others(self) -> List[str]:
+        return [u for u in self.peers if u != self.self_uri]
+
+    # -- leadership ----------------------------------------------------------
+    def leader_uri(self):
+        """The current leaseholder: the lowest-rank live peer.  ``None``
+        while we are still in boot grace and every lower-rank peer looks
+        dead (leadership is unknowable until the grace resolves)."""
+        now = self._clock()
+        grace = self.in_grace()
+        with self._lock:
+            for uri in self.peers:
+                if uri == self.self_uri:
+                    if grace:
+                        continue          # defer: an acting leader may exist
+                    return uri
+                if now - self._last_heard[uri] <= self.lease_ttl:
+                    return uri
+            return None if grace else self.self_uri
+
+    def peer_stats(self) -> List[dict]:
+        now = self._clock()
+        with self._lock:
+            out = []
+            for uri in self.peers:
+                if uri == self.self_uri:
+                    out.append({"uri": uri, "self": True, "alive": True,
+                                "age_s": 0.0})
+                else:
+                    age = now - self._last_heard[uri]
+                    out.append({"uri": uri, "self": False,
+                                "alive": age <= self.lease_ttl,
+                                "age_s": round(age, 3)})
+            return out

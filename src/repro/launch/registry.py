@@ -1,0 +1,89 @@
+"""Registry node launcher — one replica of the fabric's control plane.
+
+Every node of a quorum is started with the SAME ordered ``--peers`` list
+(order is leadership priority; the lowest-ranked live replica holds the
+leader lease) and its own entry as ``--listen``.  Clients — pools,
+``ServiceInstance``s, ``--registry`` flags — are given the whole
+comma-separated set and fail over between replicas on their own.
+
+  # three-node quorum (run one per host):
+  python -m repro.launch.registry --listen tcp://10.0.0.1:7700 \\
+      --peers tcp://10.0.0.1:7700,tcp://10.0.0.2:7700,tcp://10.0.0.3:7700
+  ...same command on 10.0.0.2 / 10.0.0.3 with their --listen...
+
+  # single-node (development):
+  python -m repro.launch.registry --listen tcp://127.0.0.1:7700
+
+See docs/OPERATIONS.md for deployment guidance and DESIGN.md §8 for the
+replication protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.executor import Engine
+from repro.fabric import RegistryService
+from repro.services import MembershipServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="fabric registry node (control plane replica)")
+    ap.add_argument("--listen", required=True,
+                    help="this node's address (set), e.g. tcp://0.0.0.0:7700")
+    ap.add_argument("--peers", default=None, metavar="URI,URI,...",
+                    help="ordered quorum peer list (identical on every "
+                         "node; order = leadership priority).  Omit for a "
+                         "single-node registry.")
+    ap.add_argument("--self", dest="self_uri", default=None,
+                    help="this node's entry in --peers when it differs "
+                         "from the resolved --listen uri (e.g. listening "
+                         "on 0.0.0.0 but advertised by host IP)")
+    ap.add_argument("--instance-ttl", type=float, default=3.0,
+                    help="seconds without a fab.report before an "
+                         "instance is expired")
+    ap.add_argument("--lease-ttl", type=float, default=1.0,
+                    help="leader lease: seconds of gossip silence before "
+                         "a peer is presumed dead")
+    ap.add_argument("--gossip-interval", type=float, default=0.25,
+                    help="seconds between gossip rounds")
+    ap.add_argument("--membership", action="store_true",
+                    help="co-host a MembershipServer (mem.*) on this "
+                         "node; its member expiries reap bound instances")
+    args = ap.parse_args(argv)
+
+    engine = Engine(args.listen)
+    peers = ([p.strip() for p in args.peers.split(",") if p.strip()]
+             if args.peers else None)
+    membership = MembershipServer(engine) if args.membership else None
+    svc = RegistryService(
+        engine, membership=membership,
+        instance_ttl=args.instance_ttl, peers=peers,
+        self_uri=args.self_uri, lease_ttl=args.lease_ttl,
+        gossip_interval=args.gossip_interval)
+    print(f"registry node at {engine.uri}"
+          + (f" (quorum of {len(peers)}, priority "
+             f"{peers.index(svc.self_uri)})" if peers else " (single)"),
+          flush=True)
+    try:
+        last_role = None
+        while True:
+            time.sleep(2.0)
+            st = svc._status({})
+            if st["role"] != last_role:
+                print(f"[registry] role={st['role']} "
+                      f"leader={st['leader']} epoch={st['epoch']} "
+                      f"instances={st['instances']}", flush=True)
+                last_role = st["role"]
+    except KeyboardInterrupt:
+        pass
+    finally:
+        svc.close()
+        if membership is not None:
+            membership.close()
+        engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -33,10 +33,13 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--demo", action="store_true")
-    ap.add_argument("--registry", default=None, metavar="URI",
+    ap.add_argument("--registry", default=None, metavar="URI[,URI...]",
                     help="fabric registry to self-register with (service "
                          "'gen'): replicas started this way are routable "
-                         "through a ServicePool")
+                         "through a ServicePool.  For a replicated "
+                         "registry pass the whole comma-separated quorum "
+                         "address set; registration and heartbeats fail "
+                         "over between the replicas (DESIGN.md §8)")
     ap.add_argument("--service", default="gen",
                     help="service name to register under (with --registry)")
     args = ap.parse_args(argv)

@@ -38,9 +38,14 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     on_token: Optional[Callable[[int, int], None]] = None
-    # monotonic time of submit(); the gateway's AdmissionController
-    # measures its service-time EWMA from this stamp
+    # monotonic time of submit(); the gateway derives submit→done
+    # turnaround (queue wait included) from this stamp
     t_submit: float = 0.0
+    # monotonic time the request took a slot (prefill start); the
+    # gateway's AdmissionController measures its *pure service time*
+    # EWMA (slot occupancy, admit→done) from this, keeping queue wait
+    # out of the shedding estimate
+    t_admit: float = 0.0
     _done_cbs: List[Callable[[], None]] = field(default_factory=list)
     _cb_lock: threading.Lock = field(default_factory=threading.Lock)
 
@@ -138,6 +143,7 @@ class ServeEngine:
                 req = self.queue.get_nowait()
             except queue.Empty:
                 return
+            req.t_admit = time.monotonic()
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             if req.frontend is not None:
                 batch["frontend"] = jnp.asarray(req.frontend[None])

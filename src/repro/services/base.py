@@ -107,6 +107,15 @@ class AdmissionController:
     so is everything until ``min_samples`` completions have been
     observed (no estimate yet — shedding on a guess is worse than
     queueing).
+
+    The EWMA that feeds the estimate is **pure service time** — the span
+    a request actually occupied an execution slot (admit→done), not
+    submit→done.  The distinction matters right after a burst: queue
+    wait is already priced in via the ``backlog`` term, so folding it
+    into the EWMA as well double-counts queueing and over-sheds until
+    the EWMA re-converges.  ``turnaround_s`` (submit→done, queue wait
+    included) is tracked separately for observability
+    (``ema_turnaround_ms`` in :meth:`stats`).
     """
 
     def __init__(self, ewma_alpha: float = 0.2, min_samples: int = 3,
@@ -114,14 +123,19 @@ class AdmissionController:
         self.ewma_alpha = ewma_alpha
         self.min_samples = min_samples
         self.safety = safety      # >1.0 sheds earlier, <1.0 later
-        self.ema_service = 0.0    # seconds per request
+        self.ema_service = 0.0    # seconds per request, slot-occupancy only
+        self.ema_turnaround = 0.0  # submit→done, queue wait included
         self.samples = 0
         self.admitted = 0
         self.shed = 0
         self._lock = threading.Lock()
 
-    def observe(self, service_s: float) -> None:
-        """Record one completed request's service time (admit→done)."""
+    def observe(self, service_s: float,
+                turnaround_s: Optional[float] = None) -> None:
+        """Record one completed request: ``service_s`` is the pure
+        service time (slot occupancy, admit→done); ``turnaround_s``
+        optionally records submit→done for observability.  Only
+        ``service_s`` feeds the shedding estimate."""
         if service_s < 0:
             return
         with self._lock:
@@ -129,6 +143,10 @@ class AdmissionController:
             self.ema_service = (service_s if not self.samples
                                 else a * service_s
                                 + (1 - a) * self.ema_service)
+            if turnaround_s is not None and turnaround_s >= 0:
+                self.ema_turnaround = (
+                    turnaround_s if not self.samples
+                    else a * turnaround_s + (1 - a) * self.ema_turnaround)
             self.samples += 1
 
     def estimate_wait(self, backlog: int, parallelism: int) -> float:
@@ -161,6 +179,7 @@ class AdmissionController:
     def stats(self) -> dict:
         with self._lock:
             return {"ema_service_ms": self.ema_service * 1e3,
+                    "ema_turnaround_ms": self.ema_turnaround * 1e3,
                     "admission_samples": self.samples,
                     "admitted": self.admitted, "shed": self.shed}
 

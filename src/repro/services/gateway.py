@@ -20,8 +20,9 @@ RPCs:
 
 A background thread drives ``ServeEngine.step()`` whenever work exists
 (woken by the engine's work event — no idle polling); with ``registry=``
-the gateway self-registers as an instance of service ``service`` and
-reports its load, making it routable through a
+(one endpoint or the comma-separated replica set of a registry quorum —
+see DESIGN.md §8) the gateway self-registers as an instance of service
+``service`` and reports its load, making it routable through a
 :class:`~repro.fabric.pool.ServicePool`.
 
 **Deadline-aware admission control**: every submit path (``gen.submit``,
@@ -107,12 +108,21 @@ class ServingGateway:
             frontend=None if fe is None else np.asarray(fe, np.float32))
         with self._lock:
             self.requests[req.rid] = req
-        # feed the admission EWMA from every completion, measured from
-        # the engine's own submit stamp when it provides one (works for
-        # any serve-engine implementation, model-backed or not)
+        # feed the admission EWMA from every completion.  The EWMA that
+        # drives shedding is PURE service time — measured from the
+        # engine's slot-admission stamp (t_admit), not from submit —
+        # because queue wait is already priced in via the backlog term;
+        # measuring submit→done would double-count queueing right after
+        # a burst and over-shed until the EWMA re-converged.  submit→done
+        # is still recorded separately (ema_turnaround_ms in gen.stats).
         t_in = req.t_submit or t0
-        req.add_done_callback(
-            lambda: self.admission.observe(time.monotonic() - t_in))
+
+        def _observe():
+            now = time.monotonic()
+            self.admission.observe(now - (req.t_admit or t_in),
+                                   turnaround_s=now - t_in)
+
+        req.add_done_callback(_observe)
         return req
 
     def _submit(self, req_in, handle):

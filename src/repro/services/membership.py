@@ -5,11 +5,19 @@ member set changes (join, leave, heartbeat timeout).  Training drivers
 poll the epoch each step: on change they rebuild the mesh from the
 survivors and restore from the checkpoint service (elastic scaling +
 node-failure recovery, exercised in tests and the elastic example).
+
+Views also carry a per-run **nonce** (the same scheme the registry uses,
+DESIGN.md §7/§8): epochs are only comparable within one coordinator run,
+so a driver that compares ``view["epoch"]`` across a coordinator restart
+can detect the reset (nonce changed → resync) instead of treating the
+reset-to-small epoch as stale forever.  The replicated registry's gossip
+stream is keyed the same way.
 """
 from __future__ import annotations
 
 import threading
 import time
+import uuid
 from typing import Callable, Dict, List, Optional
 
 from ..core.executor import Engine
@@ -22,6 +30,9 @@ class MembershipServer:
         self.timeout = heartbeat_timeout
         self.members: Dict[str, dict] = {}     # member_id -> info
         self.epoch = 0
+        # run nonce: epochs are only comparable within one coordinator
+        # run (see module docstring)
+        self.nonce = uuid.uuid4().hex[:12]
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._expire_cbs: List[Callable[[List[str]], None]] = []
@@ -71,7 +82,7 @@ class MembershipServer:
             return self._view_locked()
 
     def _view_locked(self):
-        return {"epoch": self.epoch,
+        return {"epoch": self.epoch, "nonce": self.nonce,
                 "members": sorted(self.members.keys()),
                 "uris": {k: v["uri"] for k, v in self.members.items()}}
 

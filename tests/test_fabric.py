@@ -21,7 +21,8 @@ from repro.fabric import (BudgetExhausted, CreditGate, EwmaWeighted,
                           resolve_service_uris)
 from repro.fabric.pool import Replica
 from repro.serve.engine import Request
-from repro.services import MembershipServer, ServingGateway
+from repro.services import (AdmissionController, MembershipServer,
+                            ServingGateway)
 
 
 @pytest.fixture
@@ -610,6 +611,55 @@ def test_pool_reroutes_overload_to_other_replica(reg):
         e.shutdown()
 
 
+def test_admission_tracks_pure_service_time():
+    """The shedding estimate uses the pure-service EWMA; queue wait is
+    priced only via the backlog term (feeding submit→done turnaround
+    back into the EWMA would double-count queueing right after a burst
+    and over-shed until the EWMA re-converged)."""
+    adm = AdmissionController(min_samples=1)
+    for _ in range(4):                 # 50ms of work behind a ~1s queue
+        adm.observe(0.05, turnaround_s=1.0)
+    st = adm.stats()
+    assert 40 < st["ema_service_ms"] < 60
+    assert st["ema_turnaround_ms"] > 500
+    # 4 backlog / 2 slots -> 2 waves + own service: ~150ms, NOT ~3s —
+    # a caller with a 500ms budget is admitted post-burst
+    assert adm.estimate_wait(backlog=4, parallelism=2) < 0.2
+    adm.admit(0.5, backlog=4, parallelism=2)   # must not raise
+
+
+def test_gateway_admission_excludes_queue_wait():
+    """Requests held in the gateway queue must not inflate the service
+    EWMA: t_admit (slot entry) is the measurement origin, t_submit only
+    feeds the separate turnaround EWMA."""
+    gate = threading.Event()
+    serve = FakeServe(auto=False, gate=gate)
+    with Engine("tcp://127.0.0.1:0") as e:
+        gw = ServingGateway(e, serve)
+        try:
+            with Engine("tcp://127.0.0.1:0") as cli:
+                cli.call(e.uri, "gen.submit", {"tokens": [1]}, timeout=5.0)
+            time.sleep(0.5)            # queue wait: gate still closed
+            gate.set()                 # admit: slot occupancy starts
+            deadline = time.time() + 5
+            while time.time() < deadline and not serve.parked:
+                time.sleep(0.01)
+            assert serve.parked
+            time.sleep(0.25)           # service time
+            req = serve.parked[0]
+            req.done_event.set()
+            req._fire_done()
+            st = gw.admission.stats()
+            # service ~= 0.25s (plus step-loop poll slack), turnaround
+            # additionally carries the ~0.5s queue wait
+            assert st["admission_samples"] == 1
+            assert st["ema_service_ms"] < 550
+            assert st["ema_turnaround_ms"] > 650
+            assert st["ema_turnaround_ms"] > st["ema_service_ms"] + 300
+        finally:
+            gw.close()
+
+
 # ---------------------------------------------------------------------------
 # tier failover (na/multi + pool demotion)
 # ---------------------------------------------------------------------------
@@ -663,13 +713,17 @@ def test_membership_close_joins_sweeper():
 
 class FakeServe:
     """Minimal ServeEngine stand-in: completes each request with one
-    token per step — lets gateway plumbing be tested without a model."""
+    token per step — lets gateway plumbing be tested without a model.
+    Stamps ``t_submit``/``t_admit`` like the real engine (the admission
+    EWMA's measurement origins); an optional ``gate`` event holds
+    requests in the queue until set, creating real queue wait."""
 
-    def __init__(self, n_slots=2, auto=True):
+    def __init__(self, n_slots=2, auto=True, gate=None):
         self.queue = queue.Queue()
         self.work = threading.Event()
         self.n_slots = n_slots
         self.auto = auto
+        self.gate = gate               # None = admit immediately
         self.parked = []               # auto=False: admitted, not finished
         self._rid = 0
         self._lock = threading.Lock()
@@ -679,17 +733,21 @@ class FakeServe:
         with self._lock:
             self._rid += 1
             req = Request(self._rid, np.asarray(tokens, np.int32), max_new)
+        req.t_submit = time.monotonic()
         self.queue.put(req)
         self.work.set()
         return req
 
     def step(self):
+        if self.gate is not None and not self.gate.is_set():
+            return 0
         n = 0
         while True:
             try:
                 req = self.queue.get_nowait()
             except queue.Empty:
                 return n
+            req.t_admit = time.monotonic()
             if self.auto:
                 req.out_tokens.append(7)
                 req.done_event.set()

@@ -1,0 +1,320 @@
+"""Replicated registry control plane (DESIGN.md §8): deterministic
+leader lease, gossip replication to followers, follower write proxying,
+client endpoint failover, leaseholder kill mid-run (pools converge to a
+survivor within one refresh interval with zero client-visible resolution
+errors), and restart resync (a restarted replica adopts the acting
+leader's snapshot before it may reclaim the lease)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.executor import Engine
+from repro.core.types import MercuryError, Ret
+from repro.fabric import (PeerTracker, RegistryClient, RegistryService,
+                          RetryPolicy, ServiceInstance, ServicePool,
+                          parse_registry_uris)
+from repro.services import MembershipServer
+
+LEASE = 0.5
+GOSSIP = 0.12
+
+
+def _wait(pred, timeout=8.0, interval=0.03, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(interval)
+    raise AssertionError(f"timed out waiting for {msg}")
+
+
+def _mk_cluster(n=3, instance_ttl=5.0):
+    engines = [Engine("tcp://127.0.0.1:0") for _ in range(n)]
+    peers = [e.uri for e in engines]
+    regs = [RegistryService(e, peers=peers, lease_ttl=LEASE,
+                            gossip_interval=GOSSIP, sweep_interval=0.1,
+                            instance_ttl=instance_ttl)
+            for e in engines]
+    return engines, peers, regs
+
+
+@pytest.fixture
+def cluster():
+    engines, peers, regs = _mk_cluster()
+    # cold start: rank 0 self-elects after its boot grace (one lease)
+    _wait(lambda: regs[0].is_leader, msg="rank-0 leadership")
+    yield engines, peers, regs
+    for r in regs:
+        r.close()
+    for e in engines:
+        try:
+            e.shutdown()
+        except Exception:
+            pass
+
+
+def _echo_engine(name):
+    e = Engine("tcp://127.0.0.1:0")
+    e.register("echo", lambda x, _n=name: (_n, x))
+    return e
+
+
+# ---------------------------------------------------------------------------
+# lease bookkeeping (pure)
+# ---------------------------------------------------------------------------
+def test_peer_tracker_lease_and_grace():
+    t = [0.0]
+    tr = PeerTracker(["a", "b", "c"], "b", lease_ttl=1.0,
+                     clock=lambda: t[0])
+    # boot grace: a (optimistically alive) leads; self is deferred
+    assert tr.in_grace() and tr.leader_uri() == "a"
+    t[0] = 1.5                      # grace over, a's lease expired
+    assert not tr.in_grace()
+    assert tr.leader_uri() == "b"   # we are the best live peer
+    tr.note("a")                    # a came back
+    assert tr.leader_uri() == "a"
+    t[0] = 3.0                      # a silent past the lease again
+    assert tr.leader_uri() == "b"
+    stats = {p["uri"]: p for p in tr.peer_stats()}
+    assert stats["b"]["self"] and not stats["a"]["alive"]
+
+
+def test_peer_tracker_grace_with_all_peers_dead():
+    t = [0.0]
+    tr = PeerTracker(["a", "b"], "a", lease_ttl=1.0, clock=lambda: t[0])
+    t[0] = 0.5
+    # in grace, nobody heard, self deferred: leadership unknowable
+    assert tr.leader_uri() == "b"   # b still within its optimistic lease
+    tr.mark_synced()                # adopted a snapshot: grace over early
+    assert tr.leader_uri() == "a"
+
+
+def test_parse_registry_uris_rejects_empty():
+    with pytest.raises(ValueError):
+        parse_registry_uris("  , ,")
+    assert parse_registry_uris("a;b,c") == ["a;b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# gossip replication
+# ---------------------------------------------------------------------------
+def test_cluster_elects_lowest_rank_and_agrees(cluster):
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        for uri in peers:
+            st = cli.call(uri, "fab.status", {}, timeout=5.0)
+            assert st["leader"] == peers[0], st
+        assert regs[0].is_leader
+        assert not regs[1].is_leader and not regs[2].is_leader
+        roles = [cli.call(u, "fab.status", {}, timeout=5.0)["role"]
+                 for u in peers]
+        assert roles == ["leader", "follower", "follower"]
+
+
+def test_register_replicates_to_follower_reads(cluster):
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        lead = RegistryClient(cli, peers[0])
+        iid = lead.register("svc", "tcp://127.0.0.1:1111", capacity=4)
+        # followers serve the mirrored view (reads never proxy)
+        for uri in peers[1:]:
+            follower = RegistryClient(cli, uri)
+            _wait(lambda f=follower: [i["iid"] for i in
+                                      f.resolve("svc")["instances"]] == [iid],
+                  msg="gossip replication to follower")
+            e, n = follower.epoch_info()
+            le, ln = lead.epoch_info()
+            assert (e, n) == (le, ln)   # same stream: nonce + epoch match
+
+
+def test_follower_proxies_writes_to_leaseholder(cluster):
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        fol = RegistryClient(cli, peers[2])      # follower endpoint only
+        iid = fol.register("svc", "tcp://127.0.0.1:2222", capacity=1)
+        # the write landed on the leader's authoritative table
+        assert any(i["iid"] == iid for i in
+                   RegistryClient(cli, peers[0]).resolve("svc")["instances"])
+        # load reports proxy too, and application errors pass through:
+        fol.report("svc", iid, load=3.0)
+        with pytest.raises(MercuryError) as ei:
+            fol.report("svc", "nonexistent-iid", load=0.0)
+        assert ei.value.ret == Ret.NOENTRY
+        assert fol.deregister("svc", iid)
+
+
+def test_registry_client_rotates_past_dead_endpoint(cluster):
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        dead = "tcp://127.0.0.1:1"               # nothing listens there
+        c = RegistryClient(cli, [dead] + peers, timeout=5.0)
+        iid = c.register("svc", "tcp://127.0.0.1:3333")
+        assert c.resolve("svc")["instances"][0]["iid"] == iid
+        # sticky: after one failover the live endpoint is preferred
+        assert c.registry != dead
+
+
+def test_registration_during_cold_boot_succeeds():
+    """A write racing the quorum's cold start (every replica still in
+    boot grace → AGAIN everywhere) must succeed once the lease settles:
+    RegistryClient re-probes within its timeout budget instead of
+    surfacing the transient — real launchers can't spin on is_leader."""
+    engines, peers, regs = _mk_cluster()
+    try:
+        with Engine("tcp://127.0.0.1:0") as cli:
+            c = RegistryClient(cli, peers, timeout=8.0)
+            iid = c.register("svc", "tcp://127.0.0.1:6666")   # no wait
+            assert [i["iid"] for i in
+                    c.resolve("svc")["instances"]] == [iid]
+    finally:
+        for r in regs:
+            r.close()
+        for e in engines:
+            e.shutdown()
+
+
+def test_follower_hosted_membership_reaps_via_leader(cluster):
+    """A MembershipServer co-hosted on a FOLLOWER node: its expiries are
+    resolved against the follower's mirror and forwarded to the
+    leaseholder as deregisters — the member-bound instance dies with its
+    member even though it keeps reporting."""
+    engines, peers, regs = cluster
+    ms = MembershipServer(engines[2], heartbeat_timeout=0.4,
+                          sweep_interval=0.1)
+    ms.on_expire(regs[2]._members_expired)
+    with Engine("tcp://127.0.0.1:0") as w:
+        cli = RegistryClient(w, peers)
+        w.call(peers[2], "mem.join", {"member_id": "w1", "uri": w.uri})
+        iid = cli.register("svc", w.uri, member_id="w1")
+        # member w1 never heartbeats; the instance DOES keep reporting,
+        # so only the (forwarded) member-expiry path can remove it
+        gone = False
+        deadline = time.time() + 8
+        while time.time() < deadline and not gone:
+            try:
+                cli.report("svc", iid, load=0.0)
+            except MercuryError as e:
+                gone = e.ret == Ret.NOENTRY
+            time.sleep(0.05)
+        assert gone, "member-bound instance survived its member"
+        assert cli.resolve("svc")["instances"] == []
+    ms.close()
+
+
+# ---------------------------------------------------------------------------
+# leaseholder kill mid-run (the ISSUE acceptance scenario)
+# ---------------------------------------------------------------------------
+def test_leader_kill_pools_converge_with_zero_resolution_errors(cluster):
+    """Kill the leaseholder under routed load: every pool call keeps
+    succeeding (client endpoint failover + follower read-serving), the
+    next-ranked replica takes the lease, and the pool's view resyncs
+    onto the survivor's fresh stream within one refresh interval."""
+    engines, peers, regs = cluster
+    srv_a, srv_b = _echo_engine("a"), _echo_engine("b")
+    with srv_a, srv_b, Engine("tcp://127.0.0.1:0") as cli:
+        insts = [ServiceInstance(s, peers, "svc", capacity=4,
+                                 report_interval=0.1)
+                 for s in (srv_a, srv_b)]
+        refresh = 0.2
+        pool = ServicePool(cli, peers, "svc", refresh_interval=refresh,
+                           policy=RetryPolicy(attempts=3, rpc_timeout=2.0,
+                                              backoff_base=0.01))
+        assert len(pool.replicas()) == 2
+        errors, stop = [], threading.Event()
+
+        def drive():
+            i = 0
+            while not stop.is_set():
+                try:
+                    pool.call("echo", i, timeout=5.0)
+                except Exception as e:   # noqa: BLE001 — surfaced below
+                    errors.append(repr(e))
+                i += 1
+
+        threads = [threading.Thread(target=drive) for _ in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.5)
+
+        regs[0].close()                  # kill the leaseholder abruptly
+        engines[0].shutdown()
+        t_kill = time.monotonic()
+
+        # pools fail over to a surviving replica within ~one refresh
+        # interval: the control plane answers again immediately
+        _wait(lambda: pool.registry.epoch_info() is not None,
+              timeout=refresh + 2.0, msg="client failover")
+        # the lease moves to the next-ranked survivor...
+        _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
+        takeover_s = time.monotonic() - t_kill
+        # ...and the pool resyncs onto the new stream (nonce change)
+        new_nonce = regs[1].nonce
+        _wait(lambda: (pool.refresh(force=True) or
+                       pool._view_nonce == new_nonce),
+              msg="pool resync onto survivor stream")
+        time.sleep(0.3)                  # keep routing on the new stream
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not errors, f"client-visible failures: {errors[:3]}"
+        assert takeover_s < LEASE + 2.0
+        # registrations survived the failover (mirror promoted, not lost)
+        assert len(pool.replicas()) == 2
+        for inst in insts:
+            inst.close()
+
+
+# ---------------------------------------------------------------------------
+# restart resync
+# ---------------------------------------------------------------------------
+def test_restarted_follower_resyncs_from_leader(cluster):
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        RegistryClient(cli, peers[0]).register("svc", "tcp://127.0.0.1:4444")
+        port = int(peers[2].rsplit(":", 1)[1])
+        regs[2].close()
+        engines[2].shutdown()
+        # restart rank 2 on the same configured uri: empty table, boot
+        # grace, adopts the acting leader's snapshot
+        engines[2] = Engine(f"tcp://127.0.0.1:{port}")
+        regs[2] = RegistryService(engines[2], peers=peers, lease_ttl=LEASE,
+                                  gossip_interval=GOSSIP,
+                                  sweep_interval=0.1, instance_ttl=5.0)
+        fol = RegistryClient(cli, peers[2])
+        _wait(lambda: fol.resolve("svc")["instances"],
+              msg="restarted follower resync")
+        assert fol.epoch_info() == RegistryClient(cli,
+                                                  peers[0]).epoch_info()
+        assert not regs[2].is_leader
+
+
+def test_restarted_leader_resyncs_before_reclaiming_lease(cluster):
+    """Kill rank 0; rank 1 takes over and keeps accepting writes.  A
+    restarted rank 0 must adopt rank 1's snapshot BEFORE reclaiming the
+    lease — registrations written during its absence survive."""
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        port = int(peers[0].rsplit(":", 1)[1])
+        regs[0].close()
+        engines[0].shutdown()
+        _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
+        # a write accepted by the acting leader while rank 0 is down
+        iid = RegistryClient(cli, peers[1:]).register(
+            "svc", "tcp://127.0.0.1:5555", capacity=2)
+
+        engines[0] = Engine(f"tcp://127.0.0.1:{port}")
+        regs[0] = RegistryService(engines[0], peers=peers, lease_ttl=LEASE,
+                                  gossip_interval=GOSSIP,
+                                  sweep_interval=0.1, instance_ttl=5.0)
+        # rank 0 resyncs, then reclaims the lease; rank 1 steps down
+        _wait(lambda: regs[0].is_leader, msg="rank-0 reclaim")
+        _wait(lambda: not regs[1].is_leader, msg="rank-1 step-down")
+        view = RegistryClient(cli, peers[0]).resolve("svc")
+        assert [i["iid"] for i in view["instances"]] == [iid], \
+            "write during the leader's absence was lost"
+        # all replicas converge onto the reclaimed stream
+        for uri in peers:
+            _wait(lambda u=uri: (RegistryClient(cli, u).epoch_info()
+                                 == (regs[0].epoch, regs[0].nonce)),
+                  msg="stream convergence after reclaim")

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs checker (the CI `docs` job).
+
+For each markdown file given (default: the repo's maintained docs):
+
+  * every fenced ```python block containing doctest prompts (`>>>`) is
+    executed through :mod:`doctest` with a fresh globals dict — the
+    snippets in DESIGN.md / docs/OPERATIONS.md are living examples, not
+    decoration;
+  * every other ```python block is compiled (syntax check) so renames
+    and API drift rot loudly;
+  * every intra-repo markdown link ``[text](path)`` is resolved
+    relative to the file and must exist; same-file anchors
+    (``[...](#heading)``) must match a heading.
+
+Usage:
+    python tools/check_docs.py                 # default file set
+    python tools/check_docs.py DESIGN.md ...   # explicit files
+Exits nonzero listing every failure.
+"""
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DEFAULT_FILES = ["DESIGN.md", "docs/OPERATIONS.md", "examples/README.md",
+                 "ROADMAP.md"]
+
+_FENCE = re.compile(r"^```(\w*)[ \t]*\n(.*?)^```[ \t]*$",
+                    re.MULTILINE | re.DOTALL)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}[ \t]+(.+?)[ \t]*$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, spaces→dashes, drop
+    everything that is not alphanumeric/dash/underscore."""
+    s = heading.strip().lower().replace(" ", "-")
+    return re.sub(r"[^a-z0-9\-_]", "", s)
+
+
+def check_snippets(path: pathlib.Path, text: str, errors: list) -> int:
+    n = 0
+    for m in _FENCE.finditer(text):
+        lang, body = m.group(1).lower(), m.group(2)
+        if lang not in ("python", "py"):
+            continue
+        n += 1
+        lineno = text[:m.start()].count("\n") + 1
+        where = f"{path}:{lineno}"
+        if ">>>" in body:
+            parser = doctest.DocTestParser()
+            try:
+                test = parser.get_doctest(body, {"__name__": "__main__"},
+                                          where, str(path), lineno)
+            except ValueError as e:
+                errors.append(f"{where}: malformed doctest: {e}")
+                continue
+            runner = doctest.DocTestRunner(verbose=False)
+
+            out: list = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                errors.append(f"{where}: {runner.failures} doctest "
+                              f"failure(s):\n" + "".join(out))
+        else:
+            try:
+                compile(body, where, "exec")
+            except SyntaxError as e:
+                errors.append(f"{where}: snippet does not parse: {e}")
+    return n
+
+
+def check_links(path: pathlib.Path, text: str, errors: list) -> int:
+    anchors = {_slug(h) for h in _HEADING.findall(text)}
+    n = 0
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        n += 1
+        lineno = text[:m.start()].count("\n") + 1
+        where = f"{path}:{lineno}"
+        base, _, frag = target.partition("#")
+        if not base:                                   # same-file anchor
+            if frag and _slug(frag) not in anchors:
+                errors.append(f"{where}: anchor #{frag} matches no "
+                              f"heading in {path.name}")
+            continue
+        dest = (path.parent / base).resolve()
+        if not dest.exists():
+            errors.append(f"{where}: link target {target!r} does not "
+                          f"exist (resolved {dest})")
+    return n
+
+
+def main(argv=None) -> int:
+    files = [pathlib.Path(f) for f in (argv or sys.argv[1:])] or \
+        [ROOT / f for f in DEFAULT_FILES]
+    errors: list = []
+    snippets = links = 0
+    for path in files:
+        if not path.exists():
+            errors.append(f"{path}: file not found")
+            continue
+        text = path.read_text(encoding="utf-8")
+        snippets += check_snippets(path, text, errors)
+        links += check_links(path, text, errors)
+    print(f"[check_docs] {len(files)} files, {snippets} python snippets, "
+          f"{links} intra-repo links")
+    if errors:
+        for e in errors:
+            print(f"[check_docs] FAIL {e}", file=sys.stderr)
+        return 1
+    print("[check_docs] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
