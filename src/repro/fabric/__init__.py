@@ -1,7 +1,9 @@
 """Service fabric (paper §"extreme-scale services"): registry-backed
 service pools with load-balanced, locality-aware routing, per-call
-deadlines/retries/hedging, credit-based flow control, and a replicated
-(leader-leased, gossip-synced) registry control plane.
+deadlines/retries/hedging, credit-based flow control, and a unified
+replicated control plane — a generic replicated-table core (leader
+lease + delta gossip) hosting the registry's instance table and the
+membership service's member table on every quorum node.
 
 See DESIGN.md §7 for the registry schema, the balancer contract and the
 credit/flow-control state machine, and §8 for the replication protocol;
@@ -15,7 +17,8 @@ from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
 from .pool import PoolError, Replica, ServicePool
 from .registry import (RegistryClient, RegistryService, ServiceInstance,
                        resolve_service_uris)
-from .replication import PeerTracker, parse_registry_uris
+from .replication import (PeerTracker, QuorumCaller, ReplicatedTable,
+                          ReplicationCore, parse_registry_uris)
 
 __all__ = [
     "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
@@ -24,5 +27,6 @@ __all__ = [
     "FabricError", "DeadlineExceeded", "BudgetExhausted", "NonRetryable",
     "ServicePool", "PoolError", "Replica", "RegistryService",
     "RegistryClient", "ServiceInstance", "resolve_service_uris",
-    "PeerTracker", "parse_registry_uris",
+    "PeerTracker", "QuorumCaller", "ReplicatedTable", "ReplicationCore",
+    "parse_registry_uris",
 ]

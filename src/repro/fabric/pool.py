@@ -40,7 +40,13 @@ reliability layer a single hard-coded URI cannot give:
     replica that last answered and rotates on dead-peer detection, so a
     registry-leader kill costs at most one failed control-plane RPC —
     never a data-path error (stale cached views keep routing, and the
-    post-failover nonce change triggers a full resync; DESIGN.md §8).
+    post-failover nonce change triggers a full resync).  The plane is
+    *unified* (DESIGN.md §8): every quorum node mirrors the instance
+    table and the membership table over one delta-gossip stream, so
+    follower-served ``fab.resolve`` reads stay within one gossip round
+    of the leaseholder even at very large instance counts — the pool's
+    steady-state ``fab.epoch`` polls and full resolves are equally
+    valid against any replica.
 """
 from __future__ import annotations
 

@@ -9,26 +9,25 @@ expiry) — load reports deliberately do **not** bump it, so cached client
 views stay valid while load churns and are refreshed cheaply via the
 ``fab.epoch`` poll.
 
-Liveness is layered on the membership service's machinery rather than
-reinvented: an instance's ``fab.report`` doubles as its heartbeat (TTL
-sweep shares the registry's own sweeper), and when the registry is given
-a :class:`~repro.services.membership.MembershipServer`, instances bound
-to a ``member_id`` are also reaped the moment the member expires.
-
-**Replication** (DESIGN.md §8): the registry is no longer a singleton.
+**Replication** (DESIGN.md §8): the registry is one consumer of the
+generic replicated control plane in :mod:`repro.fabric.replication` —
+its instance table is a :class:`~repro.fabric.replication.ReplicatedTable`
+hosted by a per-node :class:`~repro.fabric.replication.ReplicationCore`.
 Pass ``peers=`` (the same ordered URI list on every node) and N
 ``RegistryService`` instances form a quorum: a deterministic **leader
-lease** (lowest-rank live peer, tracked by
-:class:`~repro.fabric.replication.PeerTracker`) makes exactly one
-replica authoritative for epoch bumps; the leader **gossips** the full
-``fab.*`` table — keyed by its ``(epoch, nonce)`` stream — to the
-followers over the fabric's own RPC layer (``fab.gossip``); followers
-serve ``fab.resolve``/``fab.epoch`` reads from the mirrored view and
-*proxy* writes to the leaseholder.  A partitioned or restarted replica
-reconciles by nonce/epoch comparison exactly like the pools do: it
-adopts any acting leader's snapshot instead of serving its stale (or
-empty) view.  Leadership failover presents to clients as a nonce change,
-which :class:`~repro.fabric.pool.ServicePool` already resyncs on.
+lease** makes exactly one replica authoritative for writes and epoch
+bumps; the leader **delta-gossips** per-entry changes — keyed by its
+``(nonce, epoch)`` stream and per-entry version stamps — to the
+followers over the fabric's own RPC layer (``fab.gossip``), falling
+back to full snapshots for peers behind the tombstone horizon;
+followers serve ``fab.resolve``/``fab.epoch`` reads from the mirrored
+view and *proxy* writes to the leaseholder.  With
+``serve_membership=True`` the node also hosts the membership service
+(``mem.*``) as a second table on the *same* core — one lease, one
+gossip stream, so member liveness and expiry reaps survive leaseholder
+death exactly like instance registrations do.  Leadership failover
+presents to clients as a nonce change, which
+:class:`~repro.fabric.pool.ServicePool` already resyncs on.
 
 Wire schema (all values plain pytree-of-scalars — see DESIGN.md §7/§8):
 
@@ -40,9 +39,10 @@ Wire schema (all values plain pytree-of-scalars — see DESIGN.md §7/§8):
                                                 capacity, load, age}]}
   fab.services    {} -> {epoch, services: [name]}
   fab.epoch       {} -> {epoch, nonce, leader}
-  fab.status      {} -> {role, leader, nonce, epoch, peers: [...], ...}
-  fab.gossip      {from, leader, nonce, epoch, snapshot?}
-                  -> {nonce, epoch, snapshot?}              (peers only)
+  fab.status      {} -> {role, leader, nonce, epoch, tables, gossip,
+                         peers: [...], ...}
+  fab.gossip      {from, leader, nonce, epochs, delta?, snapshot?}
+                  -> {nonce, epochs, delta?, snapshot?}     (peers only)
 
 The **nonce** identifies one authoritative epoch stream: epochs are only
 comparable within one nonce.  A restarted registry resets its epoch to 0
@@ -65,69 +65,62 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from ..core.executor import Engine
 from ..core.na.multi import parse_addr_set
 from ..core.types import MercuryError, Ret
-from .replication import PeerTracker, parse_registry_uris
+from .replication import (QuorumCaller, ReplicationCore,
+                          parse_registry_uris)
 
-# transport-class failures that mean "this registry endpoint (or the
-# proxy path behind it) is unreachable/unsettled — try another replica";
-# application errors (NOENTRY from fab.report, INVALID_ARG, ...) must
-# pass through: the handler ran.
-_FAILOVER_RETS = {Ret.TIMEOUT, Ret.DISCONNECT, Ret.AGAIN, Ret.CANCELED,
-                  Ret.PROTOCOL_ERROR}
+# instance-table key separator: keys must be flat strings for the
+# replicated-table wire format; \x1f (ASCII unit separator) cannot
+# appear in a service name or a hex iid
+_KEY_SEP = "\x1f"
+
+
+def _key(service: str, iid: str) -> str:
+    return f"{service}{_KEY_SEP}{iid}"
 
 
 class RegistryService:
     """Hosts the ``fab.*`` RPCs on an engine.  Single-node by default;
     pass ``peers=`` (the same ordered list on every node — order is
-    leadership priority) to run as one replica of a quorum."""
+    leadership priority) to run as one replica of a quorum.
+    ``serve_membership=True`` co-hosts the membership service
+    (``mem.*``) on the same replication core, with its member expiries
+    reaping bound instances on whichever node holds the lease."""
 
     def __init__(self, engine: Engine, membership=None,
                  instance_ttl: float = 3.0, sweep_interval: float = 0.5,
                  peers: Optional[Sequence[str]] = None,
                  self_uri: Optional[str] = None,
-                 lease_ttl: float = 1.0, gossip_interval: float = 0.25):
+                 lease_ttl: float = 1.0, gossip_interval: float = 0.25,
+                 delta_gossip: bool = True,
+                 serve_membership: bool = False,
+                 heartbeat_timeout: float = 2.0):
         self.engine = engine
         self.ttl = instance_ttl
-        # (service, iid) -> {uris, capacity, load, member_id, last}
-        self.instances: Dict[Tuple[str, str], dict] = {}
-        self.epoch = 0
-        # stream nonce: epochs are only comparable within one nonce (a
-        # restarted registry restarts at epoch 0 and a failed-over
-        # leader starts a fresh stream — see module docstring)
-        self.nonce = uuid.uuid4().hex[:12]
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._dirty = threading.Event()   # membership moved: push now
+        # the core's sweep/gossip threads start only after every table
+        # and handler is attached: a node must never elect, sweep, or
+        # answer some of its RPCs while others are still being wired
+        self.core = ReplicationCore(
+            engine, peers=peers, self_uri=self_uri, lease_ttl=lease_ttl,
+            gossip_interval=gossip_interval, sweep_interval=sweep_interval,
+            delta_gossip=delta_gossip, autostart=False)
+        self.table = self.core.table("instances", ttl=instance_ttl)
         # member ids whose expiry still awaits reaping (follower-hosted
         # MembershipServer; see _members_expired) -> forget-after stamp
         self._pending_reaps: Dict[str, float] = {}
-        self.gossip_interval = gossip_interval
-        if peers is not None:
-            peer_list = list(peers)
-            su = self_uri or (engine.uri if engine.uri in peer_list
-                              else None)
-            if su is None:
-                raise ValueError(
-                    f"engine uri {engine.uri!r} is not in peers "
-                    f"{peer_list!r}; pass self_uri= explicitly")
-            self.tracker: Optional[PeerTracker] = PeerTracker(
-                peer_list, su, lease_ttl=lease_ttl)
-            self.self_uri = su
-            self._leading = False         # elected by the gossip loop
-        else:
-            self.tracker = None
-            self.self_uri = engine.uri
-            self._leading = True          # single node: always the leader
-        self._proxy_timeout = max(0.5, min(2.0, lease_ttl))
-        # gossip probes must resolve well inside the lease: a black-holed
-        # peer burning a full proxy_timeout per tick would starve contact
-        # with live peers and flap leadership
-        self._gossip_timeout = max(0.2, min(self._proxy_timeout,
-                                            lease_ttl / 2))
-        # full-snapshot push cadence when nothing is dirty (keeps
-        # mirrored load reports fresh without shipping the table on
-        # every heartbeat; membership changes push immediately)
-        self._full_push_every = max(1.0, gossip_interval)
-        self._next_full_push = 0.0
+        self.core.add_tick_hook(self._apply_pending_reaps)
+        self.membership = None
+        if serve_membership:
+            # lazy import: fabric must not hard-depend on services at
+            # module load (services already lazily imports fabric).
+            # Done BEFORE any fab.* handler registers: importing the
+            # services package is seconds-heavy (jax), and a node that
+            # answers fab.register while mem.join is still seconds away
+            # hands cold-boot clients hard NOENTRYs
+            from ..services.membership import MembershipServer
+            self.membership = MembershipServer(
+                engine, heartbeat_timeout=heartbeat_timeout,
+                sweep_interval=sweep_interval, core=self.core)
+            self.membership.on_expire(self._members_expired)
         engine.register("fab.register", self._register)
         engine.register("fab.deregister", self._deregister)
         # fab.report proxies to the leader in quorum mode — a nested
@@ -137,282 +130,133 @@ class RegistryService:
         engine.register("fab.services", self._services, inline=True)
         engine.register("fab.epoch", self._epoch, inline=True)
         engine.register("fab.status", self._status)
-        engine.register("fab.gossip", self._gossip)
         if membership is not None:
             # duck-typed MembershipServer: reap instances whose member died
             membership.on_expire(self._members_expired)
-        self._sweeper = threading.Thread(
-            target=self._sweep_loop, args=(sweep_interval,), daemon=True,
-            name="fabric-registry-sweep")
-        self._sweeper.start()
-        self._gossiper: Optional[threading.Thread] = None
-        if self.tracker is not None:
-            self._gossiper = threading.Thread(
-                target=self._gossip_loop, daemon=True,
-                name="fabric-registry-gossip")
-            self._gossiper.start()
+        self.core.start()
 
-    # -- leadership ----------------------------------------------------------
+    # -- leadership / compat -------------------------------------------------
     @property
     def is_leader(self) -> bool:
-        return self._leading
+        return self.core.is_leader
 
-    def _leader_for_writes(self) -> Optional[str]:
-        """None if this replica may apply writes locally; otherwise the
-        leaseholder to proxy to.  Raises ``AGAIN`` while leadership is
-        unsettled (boot grace / takeover pending) — retryable:
-        ``RegistryClient`` keeps re-probing the quorum within its own
-        timeout budget until the lease settles."""
-        if self.tracker is None or self._leading:
-            return None
-        lead = self.tracker.leader_uri()
-        if lead is None or lead == self.self_uri:
-            raise MercuryError(Ret.AGAIN,
-                               "registry leadership unsettled; retry")
-        return lead
+    @property
+    def self_uri(self) -> str:
+        return self.core.self_uri
 
-    def _proxy(self, leader: str, name: str, req: dict):
-        """Forward a write to the leaseholder (one hop only: a proxied
-        write that lands on another follower fails fast with AGAIN
-        rather than bouncing around a partitioned quorum)."""
-        if req.get("_proxied"):
-            raise MercuryError(Ret.AGAIN,
-                               "registry leadership unsettled; retry")
-        try:
-            return self.engine.call(leader, name, dict(req, _proxied=True),
-                                    timeout=self._proxy_timeout)
-        except MercuryError as e:
-            if e.ret in _FAILOVER_RETS:
-                raise MercuryError(
-                    Ret.AGAIN, f"registry leader {leader} unreachable "
-                    f"({e.ret.name}); retry") from e
-            raise                         # application error: handler ran
+    @property
+    def tracker(self):
+        return self.core.tracker
 
-    def _take_over(self) -> None:
-        """Become the leaseholder: start a fresh epoch stream (new nonce
-        → every pool resyncs) and refresh all instance heartbeats so the
-        takeover itself cannot mass-expire instances that could not
-        report while the old leader was dead."""
-        with self._lock:
-            self._leading = True
-            self.nonce = uuid.uuid4().hex[:12]
-            self.epoch += 1
-            now = time.monotonic()
-            for v in self.instances.values():
-                v["last"] = now
-        self._dirty.set()                 # announce the new stream now
+    @property
+    def epoch(self) -> int:
+        return self.table.epoch
+
+    @property
+    def nonce(self) -> str:
+        return self.core.nonce
 
     # -- handlers ------------------------------------------------------------
     def _register(self, req):
-        lead = self._leader_for_writes()
+        lead = self.core.leader_for_writes()
         if lead is not None:
-            return self._proxy(lead, "fab.register", req)
+            return self.core.proxy(lead, "fab.register", req)
         service = req["service"]
         uris = req["uris"]
         if isinstance(uris, str):
             uris = parse_addr_set(uris)
         iid = req.get("iid") or uuid.uuid4().hex[:12]
-        with self._lock:
-            prev = self.instances.get((service, iid))
-            self.instances[(service, iid)] = {
-                "uris": list(uris),
-                "capacity": int(req.get("capacity", 0)),
-                "load": float(req.get("load", 0.0)),
-                "member_id": req.get("member_id"),
-                "last": time.monotonic(),
-            }
-            # membership changed only if the instance is new or moved to
-            # different addresses; a same-uris re-register (the report
-            # loop's recovery path) must NOT bump the epoch, or every
-            # recovery forces a fab.resolve storm across all pools
-            if prev is None or prev["uris"] != list(uris):
-                self.epoch += 1
-                self._dirty.set()
-            return {"iid": iid, "epoch": self.epoch}
+        key = _key(service, iid)
+        uris = list(uris)
+        with self.core._lock:
+            prev = self.table.get(key)
+            # membership changed if the instance is new, moved to
+            # different addresses, or rebound to a different member — a
+            # member_id rebind must ride the versioned (retransmitted)
+            # stream, or a lost soft push would leave some mirror
+            # reaping against a stale binding forever.  A same-everything
+            # re-register (the report loop's recovery path) must NOT
+            # bump the epoch, or every recovery forces a fab.resolve
+            # storm across all pools
+            if (prev is None or prev["uris"] != uris
+                    or prev["member_id"] != req.get("member_id")):
+                self.table.put(key, {
+                    "service": service, "iid": iid, "uris": uris,
+                    "capacity": int(req.get("capacity", 0)),
+                    "load": float(req.get("load", 0.0)),
+                    "member_id": req.get("member_id"),
+                })
+            else:
+                self.table.update(key,
+                                  capacity=int(req.get("capacity",
+                                                       prev["capacity"])),
+                                  load=float(req.get("load",
+                                                     prev["load"])))
+            return {"iid": iid, "epoch": self.table.epoch}
 
     def _deregister(self, req):
-        lead = self._leader_for_writes()
+        lead = self.core.leader_for_writes()
         if lead is not None:
-            return self._proxy(lead, "fab.deregister", req)
-        with self._lock:
-            ok = self.instances.pop((req["service"], req["iid"]), None)
-            if ok is not None:
-                self.epoch += 1
-                self._dirty.set()
-            return {"ok": ok is not None, "epoch": self.epoch}
+            return self.core.proxy(lead, "fab.deregister", req)
+        with self.core._lock:
+            ok = self.table.delete(_key(req["service"], req["iid"]))
+            return {"ok": ok, "epoch": self.table.epoch}
 
     def _report(self, req):
-        lead = self._leader_for_writes()
+        lead = self.core.leader_for_writes()
         if lead is not None:
-            return self._proxy(lead, "fab.report", req)
-        with self._lock:
-            inst = self.instances.get((req["service"], req["iid"]))
+            return self.core.proxy(lead, "fab.report", req)
+        key = _key(req["service"], req["iid"])
+        with self.core._lock:
+            inst = self.table.get(key)
             if inst is None:
                 # expired instance re-announcing: treat as a (re)register
                 raise MercuryError(Ret.NOENTRY,
                                    f"unknown instance {req['iid']}; "
                                    f"re-register")
-            inst["load"] = float(req.get("load", inst["load"]))
+            fields = {"load": float(req.get("load", inst["load"]))}
             if "capacity" in req:
-                inst["capacity"] = int(req["capacity"])
-            inst["last"] = time.monotonic()
-            return {"epoch": self.epoch}
+                fields["capacity"] = int(req["capacity"])
+            self.table.update(key, **fields)
+            return {"epoch": self.table.epoch}
 
     def _resolve(self, req):
         service = req["service"]
         now = time.monotonic()
-        with self._lock:
-            out = [{"iid": iid, "uris": list(v["uris"]),
+        with self.core._lock:
+            out = [{"iid": v["iid"], "uris": list(v["uris"]),
                     "capacity": v["capacity"], "load": v["load"],
                     "age": now - v["last"]}
-                   for (s, iid), v in self.instances.items() if s == service]
-            return {"epoch": self.epoch, "nonce": self.nonce,
+                   for _, v in self.table.items()
+                   if v["service"] == service]
+            return {"epoch": self.table.epoch, "nonce": self.core.nonce,
                     "instances": out}
 
     def _services(self, _req):
-        with self._lock:
-            return {"epoch": self.epoch,
-                    "services": sorted({s for (s, _) in self.instances})}
+        with self.core._lock:
+            return {"epoch": self.table.epoch,
+                    "services": sorted({v["service"]
+                                        for _, v in self.table.items()})}
 
     def _epoch(self, _req):
-        with self._lock:
-            out = {"epoch": self.epoch, "nonce": self.nonce}
-        out["leader"] = (self.self_uri if self.tracker is None
-                         else self.tracker.leader_uri())
+        with self.core._lock:
+            out = {"epoch": self.table.epoch, "nonce": self.core.nonce}
+        out["leader"] = (self.core.self_uri if self.core.tracker is None
+                         else self.core.tracker.leader_uri())
         return out
 
     def _status(self, _req):
         """Operator observability (docs/OPERATIONS.md): role, believed
-        leaseholder, per-peer liveness, and table size."""
-        with self._lock:
-            base = {"self": self.self_uri, "nonce": self.nonce,
-                    "epoch": self.epoch,
-                    "instances": len(self.instances),
-                    "services": sorted({s for (s, _) in self.instances})}
-        if self.tracker is None:
-            return dict(base, role="single", leader=self.self_uri,
-                        peers=[])
-        role = ("leader" if self._leading
-                else "booting" if self.tracker.in_grace() else "follower")
-        return dict(base, role=role, leader=self.tracker.leader_uri(),
-                    peers=self.tracker.peer_stats())
-
-    # -- gossip --------------------------------------------------------------
-    def _snapshot_locked(self) -> dict:
-        now = time.monotonic()
-        return {"nonce": self.nonce, "epoch": self.epoch,
-                "instances": [
-                    {"service": s, "iid": iid, "uris": list(v["uris"]),
-                     "capacity": v["capacity"], "load": v["load"],
-                     "member_id": v["member_id"],
-                     "age": now - v["last"]}
-                    for (s, iid), v in self.instances.items()]}
-
-    def _maybe_adopt(self, frm: str, snap: dict) -> None:
-        """Adopt an acting leader's snapshot: full-state overwrite keyed
-        by (nonce, epoch).  Adopted from lower-rank (higher-priority)
-        peers always — that is also how a deposed leader steps down —
-        and from *any* acting leader during boot grace, so a restarted
-        high-priority replica resyncs before it reclaims the lease."""
-        tr = self.tracker
-        if tr is None:
-            return
-        if not (tr.in_grace() or tr.rank.get(frm, 99) <
-                tr.rank[self.self_uri]):
-            return
-        with self._lock:
-            if snap["nonce"] == self.nonce and snap["epoch"] < self.epoch:
-                return                    # stale push of our own stream
-            self._leading = False
-            self.nonce = snap["nonce"]
-            self.epoch = snap["epoch"]
-            now = time.monotonic()
-            self.instances = {
-                (i["service"], i["iid"]): {
-                    "uris": list(i["uris"]),
-                    "capacity": int(i.get("capacity", 0)),
-                    "load": float(i.get("load", 0.0)),
-                    "member_id": i.get("member_id"),
-                    "last": now - float(i.get("age", 0.0)),
-                } for i in snap["instances"]}
-        tr.mark_synced()
-
-    def _gossip(self, req):
-        """Peer-to-peer state exchange.  Leaders push full snapshots;
-        followers heartbeat with their mirrored (nonce, epoch) and are
-        answered with a snapshot whenever they are behind."""
-        frm = req.get("from")
-        if self.tracker is None or frm not in self.tracker.rank:
-            raise MercuryError(Ret.INVALID_ARG,
-                               f"gossip from unknown peer {frm!r}")
-        self.tracker.note(frm)
-        snap = req.get("snapshot")
-        if snap is not None:
-            self._maybe_adopt(frm, snap)
-        with self._lock:
-            resp = {"nonce": self.nonce, "epoch": self.epoch}
-            if self._leading and (req.get("nonce") != self.nonce
-                                  or req.get("epoch") != self.epoch):
-                resp["snapshot"] = self._snapshot_locked()
-        return resp
-
-    def _gossip_loop(self) -> None:
-        while not self._stop.is_set():
-            dirty = self._dirty.wait(self.gossip_interval)
-            self._dirty.clear()
-            if self._stop.is_set():
-                return
-            try:
-                self._gossip_tick(dirty)
-            except Exception:
-                pass                      # gossip must never die
-
-    def _gossip_tick(self, dirty: bool = False) -> None:
-        # Leadership changes hands in exactly two places: here (the
-        # lease says every higher-priority peer is dead, or — after boot
-        # grace — that we are the highest-priority survivor), and in
-        # _maybe_adopt (a higher-priority peer's push deposes us).  An
-        # acting leader does NOT step down merely because a
-        # higher-priority peer reappeared: it keeps serving until that
-        # peer has adopted its snapshot and taken over — otherwise a
-        # restarted rank-0 replica could seize the lease with an empty
-        # table before it resynced.
-        if (self.tracker.leader_uri() == self.self_uri
-                and not self._leading):
-            self._take_over()
-            dirty = True
-        self._apply_pending_reaps()
-        now = time.monotonic()
-        with self._lock:
-            payload = {"from": self.self_uri, "leader": self._leading,
-                       "nonce": self.nonce, "epoch": self.epoch}
-            # snapshot rides membership changes immediately and a slow
-            # periodic cadence otherwise (mirrored loads stay fresh);
-            # clean heartbeats carry only (nonce, epoch) — a follower
-            # that is behind pulls a snapshot via the response path
-            if self._leading and (dirty or now >= self._next_full_push):
-                payload["snapshot"] = self._snapshot_locked()
-                self._next_full_push = now + self._full_push_every
-        # parallel fan-out, bounded well inside the lease: one
-        # black-holed peer must not delay contact with live peers past
-        # lease_ttl (serialized full-timeout probes would flap leases)
-        futs = []
-        for peer in self.tracker.others():
-            try:
-                futs.append((peer, self.engine.call_async(
-                    peer, "fab.gossip", payload,
-                    timeout=self._gossip_timeout)))
-            except Exception:
-                continue
-        for peer, fut in futs:
-            try:
-                resp = fut.result(timeout=self._gossip_timeout + 0.25)
-            except Exception:
-                continue                  # lease decays on silence
-            self.tracker.note(peer)
-            snap = resp.get("snapshot") if isinstance(resp, dict) else None
-            if snap is not None:
-                self._maybe_adopt(peer, snap)
+        leaseholder, per-peer liveness + last-acked replication state,
+        per-table entry counts/epochs, and delta-vs-snapshot gossip
+        counters."""
+        st = self.core.status()
+        with self.core._lock:
+            st.update(epoch=self.table.epoch,
+                      instances=len(self.table),
+                      services=sorted({v["service"]
+                                       for _, v in self.table.items()}))
+        return st
 
     # -- liveness ------------------------------------------------------------
     def _members_expired(self, member_ids: List[str]) -> None:
@@ -423,13 +267,13 @@ class RegistryService:
         forward would lose the reap forever if it raced gossip (mirror
         not yet carrying the instance) or hit a leadership hiccup."""
         now = time.monotonic()
-        with self._lock:
+        with self.core._lock:
             for m in member_ids:
                 # bounded memory + no poisoning of a future legitimate
                 # re-registration: forget the reap after 2x instance TTL
                 self._pending_reaps[m] = now + 2 * self.ttl
-        self._dirty.set()                 # reap/forward promptly
-        if self._leading:
+        self.core.mark_dirty()            # reap/forward promptly
+        if self.core.is_leader:
             self._apply_pending_reaps()
 
     def _apply_pending_reaps(self) -> None:
@@ -437,7 +281,7 @@ class RegistryService:
         leading, else forward as deregisters to the leaseholder.
         Called from the expiry hook and retried every gossip tick until
         no instance matches a pending member id."""
-        with self._lock:
+        with self.core._lock:
             if not self._pending_reaps:
                 return
             now = time.monotonic()
@@ -445,52 +289,31 @@ class RegistryService:
                                    in self._pending_reaps.items()
                                    if t > now}
             pending = set(self._pending_reaps)
-            dead = [k for k, v in self.instances.items()
+            dead = [(k, v["service"], v["iid"])
+                    for k, v in self.table.items()
                     if v["member_id"] in pending]
-            if self._leading:
-                for k in dead:
-                    del self.instances[k]
-                if dead:
-                    self.epoch += 1
-                    self._dirty.set()
+            if self.core.is_leader:
+                for k, _, _ in dead:
+                    self.table.delete(k)
                 return
         if not dead:
             return
         try:
-            lead = self._leader_for_writes()
+            lead = self.core.leader_for_writes()
         except MercuryError:
             return                        # unsettled: retried next tick
-        for service, iid in dead:
+        for _, service, iid in dead:
             try:
                 self.engine.call(lead, "fab.deregister",
                                  {"service": service, "iid": iid,
                                   "_proxied": True},
-                                 timeout=self._proxy_timeout)
+                                 timeout=self.core._proxy_timeout)
             except Exception:
                 pass                      # retried next tick
 
-    def _sweep_loop(self, interval: float) -> None:
-        while not self._stop.wait(interval):
-            if not self._leading:
-                continue                  # followers mirror; only the
-            now = time.monotonic()        # leaseholder expires instances
-            with self._lock:
-                dead = [k for k, v in self.instances.items()
-                        if now - v["last"] > self.ttl]
-                for k in dead:
-                    del self.instances[k]
-                if dead:
-                    self.epoch += 1
-                    self._dirty.set()
-
     def close(self) -> None:
-        """Stop and join the sweeper and gossip threads (idempotent)."""
-        self._stop.set()
-        self._dirty.set()                 # wake a parked gossip loop
-        if self._sweeper.is_alive():
-            self._sweeper.join(timeout=2.0)
-        if self._gossiper is not None and self._gossiper.is_alive():
-            self._gossiper.join(timeout=2.0)
+        """Stop and join the control-plane threads (idempotent)."""
+        self.core.close()
 
     stop = close
 
@@ -499,60 +322,24 @@ class RegistryClient:
     """Origin-side wrapper over the ``fab.*`` RPCs with replica failover.
 
     ``registry_uri`` is a registry *address set*: one endpoint per
-    replica (list, or one comma-separated string).  Calls stick to the
-    endpoint that last answered and rotate to the next replica on
-    transport-class failures (dead peer, unsettled leadership) — any
-    live replica can serve reads and proxies writes to the leaseholder,
-    so the client never needs to know who leads.  Worst case a call
-    probes every endpoint once (``len(uris) × timeout``)."""
+    replica (list, or one comma-separated string); the underlying
+    :class:`~repro.fabric.replication.QuorumCaller` sticks to the
+    endpoint that last answered and rotates on transport-class
+    failures."""
 
     def __init__(self, engine: Engine, registry_uri, timeout: float = 10.0):
         self.engine = engine
-        self.uris = parse_registry_uris(registry_uri)
+        self._caller = QuorumCaller(engine, registry_uri, timeout=timeout)
+        self.uris = self._caller.uris
         self.timeout = timeout
-        self._idx = 0
-        self._idx_lock = threading.Lock()
 
     @property
     def registry(self) -> str:
         """The currently preferred endpoint (observability/tests)."""
-        with self._idx_lock:
-            return self.uris[self._idx]
+        return self._caller.current
 
     def _call(self, name: str, req: dict):
-        # One rotation over the endpoints; if every replica answered
-        # AGAIN (leadership unsettled: cold-quorum boot grace, or the
-        # lease mid-failover) the quorum is alive but momentarily
-        # unwritable, so keep retrying within the call's own timeout
-        # budget rather than surfacing a transient to the caller —
-        # ServiceInstance/ServingGateway constructors race quorum
-        # startup in any real deployment.
-        deadline = time.monotonic() + self.timeout
-        while True:
-            with self._idx_lock:
-                start = self._idx
-            last: Optional[MercuryError] = None
-            all_again = True
-            for k in range(len(self.uris)):
-                i = (start + k) % len(self.uris)
-                try:
-                    out = self.engine.call(self.uris[i], name, req,
-                                           timeout=self.timeout)
-                except MercuryError as e:
-                    if e.ret not in _FAILOVER_RETS:
-                        raise             # application error: surfaced
-                    last = e
-                    all_again = all_again and e.ret == Ret.AGAIN
-                    continue
-                with self._idx_lock:
-                    self._idx = i         # sticky: keep the live replica
-                return out
-            if last is None:
-                raise MercuryError(Ret.NOENTRY,
-                                   "empty registry address set")
-            if not all_again or time.monotonic() + 0.1 >= deadline:
-                raise last
-            time.sleep(0.1)               # unsettled leadership: re-probe
+        return self._caller.call(name, req)
 
     def register(self, service: str, uris, capacity: int = 0,
                  load: float = 0.0, iid: Optional[str] = None,

@@ -6,6 +6,14 @@ leader lease) and its own entry as ``--listen``.  Clients — pools,
 ``ServiceInstance``s, ``--registry`` flags — are given the whole
 comma-separated set and fail over between replicas on their own.
 
+Each node hosts the **unified control plane**: the registry's instance
+table and the membership service's member table ride the same leader
+lease and delta-gossip stream (``mem.*`` is served by every node —
+follower reads, writes proxied to the leaseholder), so member liveness
+and expiry reaps survive leaseholder death.  ``--no-membership`` turns
+the membership service off; ``--full-gossip`` falls back to full-state
+snapshot gossip (the delta protocol is the default).
+
   # three-node quorum (run one per host):
   python -m repro.launch.registry --listen tcp://10.0.0.1:7700 \\
       --peers tcp://10.0.0.1:7700,tcp://10.0.0.2:7700,tcp://10.0.0.3:7700
@@ -24,7 +32,6 @@ import time
 
 from repro.core.executor import Engine
 from repro.fabric import RegistryService
-from repro.services import MembershipServer
 
 
 def main(argv=None):
@@ -48,23 +55,33 @@ def main(argv=None):
                          "a peer is presumed dead")
     ap.add_argument("--gossip-interval", type=float, default=0.25,
                     help="seconds between gossip rounds")
-    ap.add_argument("--membership", action="store_true",
-                    help="co-host a MembershipServer (mem.*) on this "
-                         "node; its member expiries reap bound instances")
+    ap.add_argument("--membership", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the membership plane (mem.*) from this "
+                         "node's replicated member table; member "
+                         "expiries reap bound instances (default: on)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=2.0,
+                    help="seconds without a mem.heartbeat before a "
+                         "member is expired")
+    ap.add_argument("--full-gossip", action="store_true",
+                    help="replicate with full-state snapshot gossip "
+                         "instead of per-entry deltas (debug/fallback)")
     args = ap.parse_args(argv)
 
     engine = Engine(args.listen)
     peers = ([p.strip() for p in args.peers.split(",") if p.strip()]
              if args.peers else None)
-    membership = MembershipServer(engine) if args.membership else None
     svc = RegistryService(
-        engine, membership=membership,
-        instance_ttl=args.instance_ttl, peers=peers,
+        engine, instance_ttl=args.instance_ttl, peers=peers,
         self_uri=args.self_uri, lease_ttl=args.lease_ttl,
-        gossip_interval=args.gossip_interval)
+        gossip_interval=args.gossip_interval,
+        delta_gossip=not args.full_gossip,
+        serve_membership=args.membership,
+        heartbeat_timeout=args.heartbeat_timeout)
     print(f"registry node at {engine.uri}"
           + (f" (quorum of {len(peers)}, priority "
-             f"{peers.index(svc.self_uri)})" if peers else " (single)"),
+             f"{peers.index(svc.self_uri)})" if peers else " (single)")
+          + (", membership plane on" if args.membership else ""),
           flush=True)
     try:
         last_role = None
@@ -72,16 +89,19 @@ def main(argv=None):
             time.sleep(2.0)
             st = svc._status({})
             if st["role"] != last_role:
+                g = st.get("gossip", {})
                 print(f"[registry] role={st['role']} "
                       f"leader={st['leader']} epoch={st['epoch']} "
-                      f"instances={st['instances']}", flush=True)
+                      f"instances={st['instances']} "
+                      f"tables={ {n: t['entries'] for n, t in st['tables'].items()} } "
+                      f"gossip(delta/snap)="
+                      f"{g.get('delta_pushes', 0)}/"
+                      f"{g.get('snapshot_pushes', 0)}", flush=True)
                 last_role = st["role"]
     except KeyboardInterrupt:
         pass
     finally:
         svc.close()
-        if membership is not None:
-            membership.close()
         engine.shutdown()
 
 

@@ -42,6 +42,14 @@ def main(argv=None):
                          "over between the replicas (DESIGN.md §8)")
     ap.add_argument("--service", default="gen",
                     help="service name to register under (with --registry)")
+    ap.add_argument("--member-id", default=None,
+                    help="join the control plane's membership service "
+                         "(mem.*, served by the same registry quorum) "
+                         "under this id and bind the registration to "
+                         "it: if this node dies, member expiry reaps "
+                         "the instance without waiting for the "
+                         "instance TTL (requires the registry to run "
+                         "with its membership plane on — the default)")
     args = ap.parse_args(argv)
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
@@ -52,11 +60,12 @@ def main(argv=None):
 
     server = Engine(args.listen)
     gw = ServingGateway(server, serve, registry=args.registry,
-                        service=args.service)
+                        service=args.service, member_id=args.member_id)
     print(f"serving {cfg.name} at {server.uri} "
           f"({args.slots} slots, max_len {args.max_len})"
           + (f", registered with {args.registry} as {args.service!r}"
-             if args.registry else ""))
+             if args.registry else "")
+          + (f", member {args.member_id!r}" if args.member_id else ""))
 
     if args.demo:
         rng = np.random.default_rng(0)

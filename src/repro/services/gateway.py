@@ -55,7 +55,8 @@ class ServingGateway:
                  registry: Optional[str] = None, service: str = "gen",
                  report_interval: float = 0.5,
                  admission: Optional[AdmissionController] = None,
-                 shed_enabled: bool = True):
+                 shed_enabled: bool = True,
+                 member_id: Optional[str] = None):
         self.engine = engine
         self.serve = serve
         self.requests: Dict[int, Request] = {}
@@ -71,13 +72,25 @@ class ServingGateway:
         engine.register("gen.generate", self._generate, pass_handle=True)
         engine.register("gen.stats", self._stats)
         self.instance = None
+        self.member = None
         if registry is not None:
             # lazy import (like checkpoint/datafeed): services must not
             # hard-depend on fabric, keeping the layering acyclic
             from ..fabric.registry import ServiceInstance
+            if member_id is not None:
+                # the unified control plane serves mem.* from the same
+                # quorum address set: join the membership plane and bind
+                # the registration to it, so a dead gateway node is
+                # reaped by member expiry (not just the instance TTL)
+                from .membership import MembershipClient
+                self.member = MembershipClient(engine, registry, member_id,
+                                               heartbeat_interval=(
+                                                   report_interval))
+                self.member.join({"role": "gateway", "service": service})
             self.instance = ServiceInstance(
                 engine, registry, service, capacity=serve.n_slots,
-                load_fn=self._load, report_interval=report_interval)
+                load_fn=self._load, report_interval=report_interval,
+                member_id=member_id)
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
@@ -236,6 +249,8 @@ class ServingGateway:
             return
         if self.instance is not None:
             self.instance.close()
+        if self.member is not None:
+            self.member.leave()
         self._stop.set()
         self.serve.work.set()            # wake a parked step loop
         self._thread.join(timeout=2.0)

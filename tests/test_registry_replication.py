@@ -1,9 +1,12 @@
-"""Replicated registry control plane (DESIGN.md §8): deterministic
-leader lease, gossip replication to followers, follower write proxying,
-client endpoint failover, leaseholder kill mid-run (pools converge to a
-survivor within one refresh interval with zero client-visible resolution
-errors), and restart resync (a restarted replica adopts the acting
-leader's snapshot before it may reclaim the lease)."""
+"""Replicated control plane (DESIGN.md §8): deterministic leader lease,
+delta-gossip replication to followers (with full-snapshot fallback),
+follower write proxying, client endpoint failover, leaseholder kill
+mid-run (pools converge to a survivor within one refresh interval with
+zero client-visible resolution errors), restart resync (a restarted
+replica adopts the acting leader's snapshot before it may reclaim the
+lease), and the membership plane folded into the registry quorum
+(members survive leaseholder death; expiry reaps fire exactly once from
+the new leader)."""
 import threading
 import time
 
@@ -12,9 +15,9 @@ import pytest
 from repro.core.executor import Engine
 from repro.core.types import MercuryError, Ret
 from repro.fabric import (PeerTracker, RegistryClient, RegistryService,
-                          RetryPolicy, ServiceInstance, ServicePool,
-                          parse_registry_uris)
-from repro.services import MembershipServer
+                          ReplicatedTable, RetryPolicy, ServiceInstance,
+                          ServicePool, parse_registry_uris)
+from repro.services import MembershipClient, MembershipServer
 
 LEASE = 0.5
 GOSSIP = 0.12
@@ -165,8 +168,11 @@ def test_registration_during_cold_boot_succeeds():
         with Engine("tcp://127.0.0.1:0") as cli:
             c = RegistryClient(cli, peers, timeout=8.0)
             iid = c.register("svc", "tcp://127.0.0.1:6666")   # no wait
-            assert [i["iid"] for i in
-                    c.resolve("svc")["instances"]] == [iid]
+            # the sticky client may read a FOLLOWER's mirror, which is
+            # documented to lag the proxied write by ≤ one gossip round
+            _wait(lambda: [i["iid"] for i in
+                           c.resolve("svc")["instances"]] == [iid],
+                  msg="registration visible after cold boot")
     finally:
         for r in regs:
             r.close()
@@ -232,7 +238,10 @@ def test_leader_kill_pools_converge_with_zero_resolution_errors(cluster):
                     errors.append(repr(e))
                 i += 1
 
-        threads = [threading.Thread(target=drive) for _ in range(4)]
+        # daemons: a failed assertion above must not leave live driver
+        # threads blocking interpreter exit (that reads as a CI hang)
+        threads = [threading.Thread(target=drive, daemon=True)
+                   for _ in range(4)]
         for t in threads:
             t.start()
         time.sleep(0.5)
@@ -248,10 +257,14 @@ def test_leader_kill_pools_converge_with_zero_resolution_errors(cluster):
         # the lease moves to the next-ranked survivor...
         _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
         takeover_s = time.monotonic() - t_kill
-        # ...and the pool resyncs onto the new stream (nonce change)
-        new_nonce = regs[1].nonce
+        # ...and the pool resyncs onto the new stream (nonce change).
+        # The survivor's nonce is read inside the predicate: a lease
+        # flap around the kill can mint a transient stream that is
+        # replaced by the post-kill takeover — comparing against a
+        # one-shot capture would wait on a nonce that no longer exists.
         _wait(lambda: (pool.refresh(force=True) or
-                       pool._view_nonce == new_nonce),
+                       (regs[1].is_leader
+                        and pool._view_nonce == regs[1].nonce)),
               msg="pool resync onto survivor stream")
         time.sleep(0.3)                  # keep routing on the new stream
         stop.set()
@@ -318,3 +331,341 @@ def test_restarted_leader_resyncs_before_reclaiming_lease(cluster):
             _wait(lambda u=uri: (RegistryClient(cli, u).epoch_info()
                                  == (regs[0].epoch, regs[0].nonce)),
                   msg="stream convergence after reclaim")
+
+
+# ---------------------------------------------------------------------------
+# ReplicatedTable: version stamps, deltas, tombstone horizon (pure)
+# ---------------------------------------------------------------------------
+def test_replicated_table_delta_roundtrip():
+    lock = threading.RLock()
+    leader = ReplicatedTable("t", lock, tombstone_ttl=60.0)
+    mirror = ReplicatedTable("t", threading.RLock(), tombstone_ttl=60.0)
+    now = time.monotonic()
+    leader.put("a", {"x": 1})
+    leader.put("b", {"x": 2})
+    mirror.install(leader.snapshot(now), now)
+    assert (mirror.epoch, len(mirror)) == (2, 2)
+
+    base = mirror.epoch
+    leader.put("c", {"x": 3})
+    leader.delete("a")
+    # soft update: no epoch bump, rides the soft channel only
+    assert leader.update("b", x=20)
+    assert leader.epoch == 4
+    d = leader.delta_since(base, now)
+    assert [e["k"] for e in d["put"]] == ["c"]
+    assert d["del"] == [["a", 4]]
+    assert mirror.apply_delta(d, now)
+    mirror.apply_soft(leader.take_soft(now), now)
+    assert mirror.epoch == 4
+    assert mirror.get("a") is None
+    assert mirror.get("b")["x"] == 20 and mirror.get("c")["x"] == 3
+    # idle: nothing to ship (heartbeats with unchanged values are free)
+    assert leader.update("b", x=20) and leader.take_soft(now) == []
+    d2 = leader.delta_since(mirror.epoch, now)
+    assert d2["put"] == [] and d2["del"] == []
+
+
+def test_replicated_table_horizon_forces_snapshot():
+    t = ReplicatedTable("t", threading.RLock(), tombstone_ttl=0.05)
+    t.put("a", {"x": 1})
+    t.put("b", {"x": 2})
+    base = t.epoch
+    t.delete("a")
+    now = time.monotonic()
+    assert t.delta_since(base, now)["del"] == [["a", 3]]
+    time.sleep(0.1)                      # tombstone GC'd: horizon moves
+    now = time.monotonic()
+    assert t.delta_since(base, now) is None, \
+        "behind-horizon delta must force a snapshot"
+    assert t.delta_since(t.epoch, now) is not None   # at-horizon is fine
+    # a gapped delta (base past the mirror's epoch) is refused
+    m = ReplicatedTable("t", threading.RLock())
+    assert not m.apply_delta({"base": 7, "epoch": 9, "put": [], "del": []},
+                             now)
+
+
+# ---------------------------------------------------------------------------
+# membership folded into the quorum
+# ---------------------------------------------------------------------------
+def _mk_member_cluster(n=3, heartbeat_timeout=0.6):
+    engines = [Engine("tcp://127.0.0.1:0") for _ in range(n)]
+    peers = [e.uri for e in engines]
+    regs = [RegistryService(e, peers=peers, lease_ttl=LEASE,
+                            gossip_interval=GOSSIP, sweep_interval=0.1,
+                            instance_ttl=5.0, serve_membership=True,
+                            heartbeat_timeout=heartbeat_timeout)
+            for e in engines]
+    return engines, peers, regs
+
+
+@pytest.fixture
+def member_cluster():
+    engines, peers, regs = _mk_member_cluster()
+    _wait(lambda: regs[0].is_leader, msg="rank-0 leadership")
+    yield engines, peers, regs
+    for r in regs:
+        r.close()
+    for e in engines:
+        try:
+            e.shutdown()
+        except Exception:
+            pass
+
+
+def test_membership_served_by_quorum(member_cluster):
+    """mem.* wire API against the quorum: joins land on the leader's
+    replicated member table (proxied from a follower endpoint), views
+    are served by followers from their mirror, and the member table
+    shares the instance table's gossip stream (same nonce)."""
+    engines, peers, regs = member_cluster
+    with Engine("tcp://127.0.0.1:0") as w:
+        # write via a FOLLOWER endpoint: proxied one hop to the leader
+        view = w.call(peers[2], "mem.join",
+                      {"member_id": "m1", "uri": w.uri,
+                       "meta": {"role": "trainer"}}, timeout=5.0)
+        assert view["members"] == ["m1"]
+        assert regs[0].membership.table.get("m1")["meta"] == \
+            {"role": "trainer"}
+        # follower-served reads: the mirror carries the member
+        for i in (1, 2):
+            _wait(lambda i=i: (engines and regs[i].membership.table
+                               .get("m1") is not None),
+                  msg=f"member replication to follower {i}")
+            v = w.call(peers[i], "mem.view", {}, timeout=5.0)
+            assert v["members"] == ["m1"]
+            assert v["nonce"] == regs[0].nonce
+        # heartbeat via a follower refreshes the leader's stamp
+        before = regs[0].membership.table.get("m1")["last"]
+        time.sleep(0.05)
+        w.call(peers[1], "mem.heartbeat",
+               {"member_id": "m1", "uri": w.uri}, timeout=5.0)
+        assert regs[0].membership.table.get("m1")["last"] > before
+
+
+def test_leaseholder_kill_members_survive_reaps_fire_once(member_cluster):
+    """The ISSUE acceptance scenario: kill the leaseholder under active
+    member heartbeats.  Heartbeating members are never mass-expired on
+    takeover; a member that stopped heartbeating before the kill is
+    expired by the NEW leader, its on_expire reap fires exactly once
+    (and only there), and its bound instance is reaped from the
+    replicated instance table."""
+    engines, peers, regs = member_cluster
+    fires = []
+    for i, r in enumerate(regs):
+        r.membership.on_expire(
+            lambda dead, i=i: fires.append((i, sorted(dead))))
+    with Engine("tcp://127.0.0.1:0") as w:
+        cli = RegistryClient(w, peers)
+        live = MembershipClient(w, peers, "live", 0.1)
+        live.join({"zone": "a"})
+        # "doomed" joins but never heartbeats; an instance is bound to it
+        w.call(peers[0], "mem.join", {"member_id": "doomed",
+                                      "uri": "tcp://x"}, timeout=5.0)
+        iid = cli.register("svc", "tcp://127.0.0.1:7777",
+                           member_id="doomed")
+        _wait(lambda: regs[1].membership.table.get("doomed") is not None,
+              msg="member replication before the kill")
+
+        regs[0].close()                   # kill the leaseholder abruptly
+        engines[0].shutdown()
+        _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
+        # doomed expires on the NEW leader (takeover refreshed liveness,
+        # so expiry lands one heartbeat_timeout after takeover, not 0)
+        _wait(lambda: any("doomed" in d for _, d in fires),
+              msg="expiry reap from the new leader")
+        # ...and its bound instance is reaped from the instance table
+        _wait(lambda: cli.resolve("svc")["instances"] == [],
+              msg="member-bound instance reap after failover")
+        time.sleep(3 * 0.6)               # settle: no duplicate fires
+        doomed_fires = [(i, d) for i, d in fires if "doomed" in d]
+        assert len(doomed_fires) == 1, f"reap fired {doomed_fires}"
+        assert doomed_fires[0][0] == 1, "reap must fire on the new leader"
+        # the heartbeating member was never expired anywhere
+        assert not any("live" in d for _, d in fires), \
+            f"heartbeating member mass-expired: {fires}"
+        assert "live" in live.current_view()["members"]
+        live.leave()
+
+
+def test_membership_nonce_resync_in_driver_path(member_cluster):
+    """The training-driver path across a control-plane failover: the
+    MembershipClient's on_change fires on the nonce change (epochs are
+    only comparable within one stream), the view still carries every
+    live member, and heartbeats keep landing via the survivors."""
+    engines, peers, regs = member_cluster
+    changes = []
+    with Engine("tcp://127.0.0.1:0") as w:
+        c = MembershipClient(w, peers, "trainer-0", 0.1,
+                             on_change=lambda v: changes.append(dict(v)))
+        first = c.join({"role": "trainer"})
+        nonce0 = first["nonce"]
+        assert nonce0 == regs[0].nonce
+        regs[0].close()
+        engines[0].shutdown()
+        _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
+        _wait(lambda: any(v.get("nonce") not in (None, nonce0)
+                          for v in changes),
+              msg="driver observes the nonce change")
+        resynced = next(v for v in changes
+                        if v.get("nonce") not in (None, nonce0))
+        assert "trainer-0" in resynced["members"], \
+            "member lost across failover"
+        c.leave()
+
+
+def test_behind_horizon_follower_resynced_by_snapshot():
+    """A follower whose acked epoch predates the leader's tombstone
+    horizon cannot be caught up by delta (deletions were GC'd): the
+    leader must fall back to a full snapshot, after which the follower
+    converges again."""
+    # private cluster: a huge instance TTL so the reporter-less test
+    # instance can never be expired while the assertions run
+    engines, peers, regs = _mk_cluster(instance_ttl=3600.0)
+    try:
+        _wait(lambda: regs[0].is_leader, msg="rank-0 leadership")
+        with Engine("tcp://127.0.0.1:0") as cli:
+            lead = RegistryClient(cli, peers[0])
+            iid = lead.register("svc", "tcp://127.0.0.1:8888")
+            _wait(lambda: regs[1].epoch == regs[0].epoch,
+                  msg="initial convergence")
+            # churn through registrations whose tombstones are GC'd at
+            # once (their deletion history is gone immediately)
+            regs[0].table.tombstone_ttl = 0.0
+            for i in range(3):
+                tmp = lead.register("tmp", f"tcp://127.0.0.1:{9100 + i}")
+                lead.deregister("tmp", tmp)
+            with regs[0].core._lock:
+                snaps_before = regs[0].core.stats["snapshot_pushes"]
+
+            # force a pre-horizon ack for peer 1 until a leader tick
+            # consumes it (the follower's own heartbeats race us and may
+            # re-ack the true epoch in between): that tick must take the
+            # snapshot path, not the delta path
+            def forced_snapshot_pushed():
+                with regs[0].core._lock:
+                    if (regs[0].core.stats["snapshot_pushes"]
+                            > snaps_before):
+                        return True
+                    regs[0].core._acks[peers[1]] = {
+                        "nonce": regs[0].nonce,
+                        "epochs": {"instances": 0}}
+                    return False
+
+            _wait(forced_snapshot_pushed, msg="snapshot fallback push")
+            _wait(lambda: (regs[1].epoch, regs[1].nonce)
+                  == (regs[0].epoch, regs[0].nonce),
+                  msg="follower reconvergence after snapshot")
+            view = RegistryClient(cli, peers[1]).resolve("svc")
+            assert [i_["iid"] for i_ in view["instances"]] == [iid]
+            assert RegistryClient(cli, peers[1]).resolve("tmp")[
+                "instances"] == []
+    finally:
+        for r in regs:
+            r.close()
+        for e in engines:
+            try:
+                e.shutdown()
+            except Exception:
+                pass
+
+
+def test_idle_quorum_gossips_heartbeats_not_state(cluster):
+    """Delta gossip's reason to exist: an idle quorum (registered
+    instances, no churn) must exchange bare heartbeats — zero delta or
+    snapshot pushes — instead of shipping the table every round."""
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        lead = RegistryClient(cli, peers[0])
+        for i in range(10):
+            lead.register("svc", f"tcp://127.0.0.1:{9300 + i}")
+        _wait(lambda: all(r.epoch == regs[0].epoch for r in regs),
+              msg="convergence")
+        time.sleep(3 * GOSSIP)            # drain in-flight rounds
+        s0 = dict(regs[0].core.stats)
+        time.sleep(10 * GOSSIP)
+        s1 = dict(regs[0].core.stats)
+        assert s1["rounds"] > s0["rounds"]
+        assert s1["delta_pushes"] == s0["delta_pushes"]
+        assert s1["snapshot_pushes"] == s0["snapshot_pushes"]
+        assert s1["heartbeat_pushes"] > s0["heartbeat_pushes"]
+
+
+def test_fab_status_reports_tables_gossip_and_acks(cluster):
+    """fab.status (docs/OPERATIONS.md): per-table entry counts/epochs,
+    delta-vs-snapshot gossip counters, and per-peer acked replication
+    state."""
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli:
+        lead = RegistryClient(cli, peers[0])
+        lead.register("svc", "tcp://127.0.0.1:9500")
+        _wait(lambda: regs[1].epoch == regs[0].epoch, msg="convergence")
+        st = lead.status()
+        assert st["role"] == "leader"
+        assert st["tables"]["instances"]["entries"] == 1
+        assert st["tables"]["instances"]["epoch"] == regs[0].epoch
+        g = st["gossip"]
+        assert g["rounds"] > 0
+        assert g["delta_pushes"] + g["snapshot_pushes"] \
+            + g["pull_snapshots"] + g["pull_deltas"] > 0
+        _wait(lambda: any(
+            p.get("acked", {}).get("instances") == regs[0].epoch
+            for p in lead.status()["peers"]),
+            msg="peer acks visible in fab.status")
+        acked = [p for p in lead.status()["peers"] if "acked" in p]
+        assert acked and all("acked_nonce" in p for p in acked)
+        # follower status: mirrored tables, role, and the same stream
+        fst = RegistryClient(cli, peers[1]).status()
+        assert fst["role"] == "follower"
+        assert fst["nonce"] == st["nonce"]
+
+
+def test_register_member_rebind_is_versioned():
+    """A same-uris re-register that changes the member binding is a
+    membership change: it must bump the epoch (ride the versioned,
+    retransmitted stream), while a same-everything re-register (the
+    report-loop recovery path) must not."""
+    with Engine("tcp://127.0.0.1:0") as e, \
+            Engine("tcp://127.0.0.1:0") as w:
+        svc = RegistryService(e, sweep_interval=0.1, instance_ttl=5.0)
+        cli = RegistryClient(w, e.uri)
+        iid = cli.register("svc", w.uri, member_id="a")
+        e1 = cli.epoch()
+        cli.register("svc", w.uri, iid=iid, member_id="a")   # recovery
+        assert cli.epoch() == e1, "same-everything re-register bumped"
+        cli.register("svc", w.uri, iid=iid, member_id="b")   # rebind
+        assert cli.epoch() == e1 + 1, "member rebind must be versioned"
+        assert svc.table.get(f"svc\x1f{iid}")["member_id"] == "b"
+        svc.close()
+
+
+def test_full_gossip_refreshes_mirrored_soft_state():
+    """--full-gossip compatibility: converged followers must keep
+    adopting the leader's equal-epoch periodic snapshots — that is how
+    mirrored loads stay fresh between membership changes."""
+    engines = [Engine("tcp://127.0.0.1:0") for _ in range(2)]
+    peers = [e.uri for e in engines]
+    regs = [RegistryService(e, peers=peers, lease_ttl=LEASE,
+                            gossip_interval=GOSSIP, sweep_interval=0.1,
+                            instance_ttl=3600.0, delta_gossip=False)
+            for e in engines]
+    try:
+        _wait(lambda: regs[0].is_leader, msg="leadership")
+        with Engine("tcp://127.0.0.1:0") as cli:
+            lead = RegistryClient(cli, peers[0])
+            iid = lead.register("svc", "tcp://127.0.0.1:9700")
+            _wait(lambda: regs[1].epoch == regs[0].epoch,
+                  msg="convergence")
+            lead.report("svc", iid, load=7.5)     # soft: no epoch bump
+            fol = RegistryClient(cli, peers[1])
+            _wait(lambda: [i["load"] for i in
+                           fol.resolve("svc")["instances"]] == [7.5],
+                  msg="mirrored load refresh under full-state gossip")
+    finally:
+        for r in regs:
+            r.close()
+        for e in engines:
+            try:
+                e.shutdown()
+            except Exception:
+                pass

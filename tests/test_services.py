@@ -107,6 +107,47 @@ def test_membership_failure_detection():
         c1.leave()
 
 
+def test_membership_heartbeat_rejoin_preserves_meta():
+    """Regression: an expired member re-announcing via heartbeat used to
+    be re-joined with ``meta={}``, silently dropping its registered
+    metadata.  The server now preserves the heartbeat's meta like
+    ``mem.join`` does, and the client carries its join meta on every
+    heartbeat so the round trip restores it."""
+    with Engine("tcp://127.0.0.1:0") as coord, \
+            Engine("tcp://127.0.0.1:0") as w:
+        ms = MembershipServer(coord, heartbeat_timeout=0.3,
+                              sweep_interval=0.05)
+        meta = {"role": "trainer", "rank": 3}
+        # server-side path: raw wire join, expiry, heartbeat re-announce
+        w.call(coord.uri, "mem.join",
+               {"member_id": "m", "uri": w.uri, "meta": meta})
+        deadline = time.time() + 5
+        while time.time() < deadline and ms.table.get("m") is not None:
+            time.sleep(0.05)             # no heartbeats: m expires
+        assert ms.table.get("m") is None
+        view = w.call(coord.uri, "mem.heartbeat",
+                      {"member_id": "m", "uri": w.uri, "meta": meta})
+        assert "m" in view["members"]
+        assert ms.table.get("m")["meta"] == meta
+
+        # client path: the heartbeat loop itself must carry the meta
+        c = MembershipClient(w, coord.uri, "c1", 0.05)
+        c.join({"zone": "a"})
+        with ms.core._lock:              # force-expire behind its back
+            ms.table.delete("c1")
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            rec = ms.table.get("c1")
+            if rec is not None and rec["meta"] == {"zone": "a"}:
+                break
+            time.sleep(0.05)
+        rec = ms.table.get("c1")
+        assert rec is not None and rec["meta"] == {"zone": "a"}, \
+            "client heartbeat re-join dropped the join metadata"
+        c.leave()
+        ms.close()
+
+
 def test_datafeed_eager_vs_bulk_identical():
     src = SyntheticSource(vocab=500, seq_len=64, batch_per_host=4)
     with Engine("tcp://127.0.0.1:0") as fe_eager, \
