@@ -23,6 +23,13 @@
    (the default) vs the PR-4 full-state snapshot protocol, measured
    idle and under churn.  Asserts the ≥10x idle reduction claimed in
    DESIGN.md §8.  Run standalone via ``--only gossip_churn``.
+8. *cached resolve*: the client-side idempotent read cache — the same
+   resolve storm with the cache on vs off, counting true registry
+   round-trips server-side.  Asserts the ≥10x reduction and zero stale
+   reads across an epoch bump, a foreign write, and a full registry
+   restart (nonce change).  Latency bench 1 additionally records the
+   co-located wire-path baseline and asserts the self-tier fast path
+   (DESIGN.md §9) is ≥3x faster.  Run via ``--only cached_resolve``.
 """
 from __future__ import annotations
 
@@ -192,6 +199,22 @@ def bench_latency(transports=("self", "sm", "tcp"), iters: int = 200) -> Dict:
                 _sample_rtt(eng, eng.uri, name, 10)      # warm
                 out[key] = statistics.median(
                     _sample_rtt(eng, eng.uri, name, iters)) * 1e6
+        # wire-path baseline for the same co-located call: local_dispatch
+        # off forces full proc encode/decode + header + progress-thread
+        # round trips.  The self-tier fast path (DESIGN.md §9) must beat
+        # it by >= 3x or the PR regressed.
+        with Engine(None, local_dispatch=False) as eng:
+            eng.register("ping", lambda x: x)
+            _sample_rtt(eng, eng.uri, "ping", 10)        # warm
+            out["self_wire_rtt_us"] = statistics.median(
+                _sample_rtt(eng, eng.uri, "ping", iters)) * 1e6
+        out["self_local_speedup_x"] = (out["self_wire_rtt_us"]
+                                       / max(out["self_rtt_us"], 1e-9))
+        assert out["self_local_speedup_x"] >= 3.0, \
+            (f"self-tier dispatch only {out['self_local_speedup_x']:.2f}x "
+             f"faster than the wire path (local "
+             f"{out['self_rtt_us']:.0f}us vs wire "
+             f"{out['self_wire_rtt_us']:.0f}us); expected >= 3x")
 
     remote = [t for t in transports if t in ("sm", "tcp")]
     if remote:
@@ -858,6 +881,126 @@ def bench_rate(inflight_levels=(1, 2, 8, 32, 128)) -> Dict:
     return out
 
 
+def bench_cached_resolve(n_threads: int = 4, n_reads: int = 250) -> Dict:
+    """Client-side idempotent read cache (DESIGN.md §9): the same resolve
+    storm with and without the cache, counting true registry round-trips
+    server-side, then staleness probes across an epoch bump (new
+    registration), a foreign write observed via a fresh epoch probe, and
+    a nonce change (registry restart).  Run via ``--only cached_resolve``.
+    """
+    from repro.fabric.registry import RegistryClient, RegistryService
+
+    out: Dict = {"name": "cached_resolve", "threads": n_threads,
+                 "reads_per_thread": n_reads}
+    tag = uuid.uuid4().hex[:8]
+    reg_uri = f"self://bench-reg-{tag}"
+
+    def start_registry(eng):
+        reg = RegistryService(eng)
+        served = [0]
+        info = eng.hg._by_name["fab.resolve"]
+        orig = info.handler
+
+        def counting(handle):
+            served[0] += 1
+            orig(handle)
+
+        info.handler = counting
+        return reg, served
+
+    def storm(client) -> float:
+        errors: List[str] = []
+
+        def run():
+            try:
+                for _ in range(n_reads):
+                    if not client.resolve("svc")["instances"]:
+                        errors.append("empty view")
+                        return
+            except Exception as e:      # noqa: BLE001 — surfaced below
+                errors.append(repr(e))
+
+        threads = [threading.Thread(target=run) for _ in range(n_threads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        dt = time.perf_counter() - t0
+        assert not errors, errors
+        return dt
+
+    reg_eng = Engine(reg_uri)
+    cli_eng = Engine(None)
+    reg = None
+    try:
+        reg, served = start_registry(reg_eng)
+        writer = RegistryClient(cli_eng, reg_uri)
+        writer.register("svc", ["self://inst-1"], iid="aaaaaaaaaaaa")
+
+        # baseline: cache off — every resolve is a registry round-trip
+        # (singleflight still collapses concurrent overlap, so this is
+        # the honest "best you can do without caching" number)
+        plain = RegistryClient(cli_eng, reg_uri, cache_ttl=0.0)
+        plain.resolve("svc")                         # warm addr/session
+        served[0] = 0
+        dt = storm(plain)
+        out["uncached_roundtrips"] = served[0]
+        out["uncached_rps"] = n_threads * n_reads / dt
+
+        # cached: TTL far above the storm duration; the token keeps it
+        # honest (any epoch/nonce movement evicts)
+        cached = RegistryClient(cli_eng, reg_uri, cache_ttl=60.0)
+        cached.resolve("svc")                        # warm populates
+        served[0] = 0
+        dt = storm(cached)
+        out["cached_roundtrips"] = served[0]
+        out["cached_rps"] = n_threads * n_reads / dt
+        out["roundtrip_reduction_x"] = round(
+            out["uncached_roundtrips"] / max(out["cached_roundtrips"], 1), 1)
+
+        stale = 0
+        # probe 1 — own write: register bumps the epoch, the response's
+        # token evicts, the very next read must see the new instance
+        cached.register("svc", ["self://inst-2"], iid="bbbbbbbbbbbb")
+        if len(cached.resolve("svc")["instances"]) != 2:
+            stale += 1
+        # probe 2 — foreign write observed via a fresh epoch probe (what
+        # ServicePool's periodic load refresh does): must evict too
+        writer.register("svc", ["self://inst-3"], iid="cccccccccccc")
+        cached.epoch_info(fresh=True)
+        if len(cached.resolve("svc")["instances"]) != 3:
+            stale += 1
+        # probe 3 — nonce change: restart the registry on the same uri.
+        # The fresh instance starts from a LOWER epoch under a new nonce;
+        # a bare epoch comparison would read it as stale and serve the
+        # dead registry's view forever.
+        reg.close()
+        reg_eng.shutdown()
+        reg_eng = Engine(reg_uri)
+        reg, served = start_registry(reg_eng)
+        writer2 = RegistryClient(cli_eng, reg_uri)
+        writer2.register("svc", ["self://inst-9"], iid="dddddddddddd")
+        cached.epoch_info(fresh=True)
+        view = cached.resolve("svc")
+        if [i["uris"] for i in view["instances"]] != [["self://inst-9"]]:
+            stale += 1
+        out["stale_reads"] = stale
+
+        assert out["roundtrip_reduction_x"] >= 10.0, \
+            (f"read cache only cut registry round-trips "
+             f"{out['roundtrip_reduction_x']:.1f}x "
+             f"({out['uncached_roundtrips']} -> "
+             f"{out['cached_roundtrips']}); expected >= 10x")
+        assert stale == 0, f"{stale} stale read(s) served after invalidation"
+        return out
+    finally:
+        if reg is not None:
+            reg.close()
+        reg_eng.shutdown()
+        cli_eng.shutdown()
+
+
 def run_all(verbose=True, transports=("self", "sm", "tcp"),
             smoke=False, only=None) -> List[Dict]:
     unknown = [t for t in transports if t not in ("self", "sm", "tcp")]
@@ -865,7 +1008,7 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
         raise SystemExit(f"unknown transport(s) {unknown}; "
                          f"choose from self, sm, tcp")
     known_benches = ("latency", "bandwidth", "rate", "pool", "overload",
-                     "registry_failover", "gossip_churn")
+                     "registry_failover", "gossip_churn", "cached_resolve")
     if only:
         bad = [b for b in only if b not in known_benches]
         if bad:
@@ -874,10 +1017,11 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
 
     def want(name):
         # default set keeps the PR-2 behavior: the chaos/scale scenarios
-        # (overload, registry_failover, gossip_churn) are opt-in
+        # (overload, registry_failover, gossip_churn, cached_resolve)
+        # are opt-in
         return (name in only if only
                 else name not in ("overload", "registry_failover",
-                                  "gossip_churn"))
+                                  "gossip_churn", "cached_resolve"))
 
     iters = 50 if smoke else 200
     sizes = (4 << 10, 1 << 20) if smoke else \
@@ -902,6 +1046,9 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
     if want("gossip_churn"):
         results.append(bench_gossip_churn(
             idle_s=3.0 if smoke else 6.0))
+    if want("cached_resolve"):
+        results.append(bench_cached_resolve(
+            n_reads=100 if smoke else 250))
     if verbose:
         lat = next((r for r in results if r["name"] == "rpc_latency"), None)
         if lat is not None:
@@ -913,6 +1060,11 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
             if "sm_speedup_vs_tcp" in lat:
                 print(f"[latency] sm is {lat['sm_speedup_vs_tcp']:.2f}x "
                       f"faster than tcp loopback for small RPCs")
+            if "self_local_speedup_x" in lat:
+                print(f"[latency] self-tier dispatch is "
+                      f"{lat['self_local_speedup_x']:.2f}x faster than "
+                      f"the co-located wire path "
+                      f"({lat['self_wire_rtt_us']:.0f}us)")
         for res in results:
             if res["name"] != "bulk_bandwidth":
                 continue
@@ -966,6 +1118,17 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                       f"cheaper idle, {res['churn_reduction_x']:.1f}x "
                       f"under {res['full']['churn_registrations']}-"
                       f"instance churn")
+            if res["name"] == "cached_resolve":
+                print(f"[cached_resolve] {res['threads']} threads x "
+                      f"{res['reads_per_thread']} resolves each:")
+                print(f"   uncached {res['uncached_roundtrips']:5d} "
+                      f"round-trips ({res['uncached_rps']:7.0f} rps) | "
+                      f"cached {res['cached_roundtrips']:3d} round-trips "
+                      f"({res['cached_rps']:7.0f} rps)")
+                print(f"   {res['roundtrip_reduction_x']:.0f}x fewer "
+                      f"registry round-trips | stale reads "
+                      f"{res['stale_reads']} across epoch bump, foreign "
+                      f"write, and registry restart")
             if res["name"] == "routed_pool_overload":
                 print(f"[overload] {res['workers']}x{res['worker_threads']}"
                       f" handlers @ {res['work_ms']:.0f}ms, "
@@ -996,7 +1159,7 @@ if __name__ == "__main__":
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                          "latency,bandwidth,rate,pool,overload,"
-                         "registry_failover,gossip_churn")
+                         "registry_failover,gossip_churn,cached_resolve")
     args = ap.parse_args()
     res = run_all(transports=tuple(args.transports.split(",")),
                   smoke=args.smoke,

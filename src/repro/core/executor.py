@@ -64,12 +64,20 @@ class Engine:
     def __init__(self, uri: Optional[str | Sequence[str]] = None,
                  listen: bool = True,
                  handler_threads: int = 4, checksum: bool = True,
-                 progress_interval: float = 0.05):
+                 progress_interval: float = 0.05, copy_local: bool = True,
+                 local_dispatch: bool = True):
         """``uri`` may be one transport URI, a semicolon-joined address set
         (``"self://a;sm://a;tcp://127.0.0.1:0"``) or a list of URIs; multi-
-        transport engines resolve each target to its cheapest tier."""
+        transport engines resolve each target to its cheapest tier.
+
+        ``local_dispatch``/``copy_local`` tune the self-tier fast path
+        (DESIGN.md §9): co-located calls skip serialization entirely;
+        ``copy_local=False`` (with ``checksum=False`` on both ends)
+        additionally shares values zero-copy instead of deep-copying."""
         self.na: NAPlugin = initialize(uri, listen=listen)
-        self.hg = HGClass(self.na, checksum_payloads=checksum)
+        self.hg = HGClass(self.na, checksum_payloads=checksum,
+                          copy_local=copy_local,
+                          local_dispatch=local_dispatch)
         self.ctx: Context = self.hg.context
         self._pool = cf.ThreadPoolExecutor(max_workers=handler_threads,
                                            thread_name_prefix="hg-handler")

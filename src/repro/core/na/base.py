@@ -130,6 +130,14 @@ class NAPlugin(abc.ABC):
         plugins route this per destination)."""
         return self.caps
 
+    def local_uris(self) -> List[str]:
+        """URIs under which peers *in this process* reach this plugin
+        with SAME_PROCESS semantics (the ``self`` tier).  The RPC layer
+        uses these to register for serialization-free local dispatch
+        (DESIGN.md §9); transports that cross a process boundary return
+        the default empty list."""
+        return []
+
     # -- staging buffers ------------------------------------------------------
     def alloc_msg_buffer(self, nbytes: int) -> Optional[np.ndarray]:
         """Optional transport-preferred staging memory for rendezvous

@@ -95,6 +95,9 @@ class MultiPlugin(NAPlugin):
         return MultiAddress(";".join(p.addr_self().uri
                                      for p in self._plugins))
 
+    def local_uris(self) -> List[str]:
+        return [u for p in self._plugins for u in p.local_uris()]
+
     def addr_lookup(self, uri: str) -> NAAddress:
         cands = sorted(parse_addr_set(uri),
                        key=lambda u: SCHEME_TIERS.get(scheme_of(u), 99))

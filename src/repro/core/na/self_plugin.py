@@ -66,6 +66,9 @@ class SelfPlugin(NAPlugin):
     def addr_self(self) -> NAAddress:
         return SelfAddress(self._uri)
 
+    def local_uris(self):
+        return [self._uri]
+
     def addr_lookup(self, uri: str) -> NAAddress:
         if not uri.startswith("self://"):
             raise MercuryError(Ret.INVALID_ARG, f"not a self uri: {uri}")

@@ -34,6 +34,16 @@ from .types import MercuryError, Ret
 
 Proc = Callable[["ProcBuf", Any], Any]
 
+# Copy-discipline thresholds (DESIGN.md §9).  Below ZEROCOPY_MIN a decoded
+# bytes value is materialized as ``bytes`` (tiny, hashable, universally
+# accepted); at or above it the decoder returns a read-only memoryview into
+# the message buffer — zero copies, valid for the message's lifetime (every
+# transport hands the RPC layer an owning buffer).  ENCODE_VIEW_MIN is the
+# point at which ``encode`` stops flattening its bytearray into a fresh
+# ``bytes`` (the second full-buffer copy) and returns a memoryview instead.
+ZEROCOPY_MIN = 4096
+ENCODE_VIEW_MIN = 64 * 1024
+
 
 class ProcBuf:
     """Encode/decode cursor. ``encoding=True`` appends; else it consumes."""
@@ -58,6 +68,13 @@ class ProcBuf:
 
     def getvalue(self) -> bytes:
         return bytes(self._buf)
+
+    def getbuffer(self) -> memoryview:
+        """Zero-copy view of the encoded buffer.  The ProcBuf must not be
+        written to while the view is exported (bytearray resize would
+        raise BufferError) — callers take the view only once encoding is
+        finished."""
+        return memoryview(self._buf)
 
     # -- decode side -------------------------------------------------------
     def read(self, n: int) -> memoryview:
@@ -140,14 +157,21 @@ def proc_bytes(p: ProcBuf, v=None):
         p.write(v)
         return v
     n = proc_varint(p)
-    return bytes(p.read(n))
+    if n < ZEROCOPY_MIN:
+        return bytes(p.read(n))
+    # large payload: hand back a read-only view into the message buffer
+    # (no copy).  Read-only keeps it hashable and content-comparable with
+    # bytes; callers needing an owning copy do bytes(view) explicitly.
+    return p.read(n).toreadonly()
 
 
 def proc_str(p: ProcBuf, v=None):
     if p.encoding:
         proc_bytes(p, v.encode("utf-8"))
         return v
-    return proc_bytes(p).decode("utf-8")
+    # decode straight from the buffer view: one copy (the str), not two
+    n = proc_varint(p)
+    return str(p.read(n), "utf-8")
 
 
 def proc_none(p: ProcBuf, v=None):
@@ -319,9 +343,15 @@ def derive(cls: type) -> Proc:
 # --------------------------------------------------------------------------
 # Convenience entry points used by rpc.py
 # --------------------------------------------------------------------------
-def encode(proc: Proc, value: Any) -> bytes:
+def encode(proc: Proc, value: Any) -> bytes | memoryview:
     p = ProcBuf(encoding=True)
     proc(p, value)
+    # fast path: past ENCODE_VIEW_MIN the flatten-to-bytes costs a second
+    # full-buffer copy; return a view of the (now write-complete) buffer
+    # instead.  Small messages stay bytes — cheap, and senders concatenate
+    # them freely.
+    if len(p._buf) >= ENCODE_VIEW_MIN:
+        return p.getbuffer()
     return p.getvalue()
 
 
@@ -350,6 +380,8 @@ def proc_any(p: ProcBuf, v=None):
             v, t = int(v), int
         elif isinstance(v, (np.floating,)):
             v, t = float(v), float
+        elif isinstance(v, (memoryview, bytearray)):
+            t = bytes  # zero-copy decoded views re-encode as bytes
         if t not in TAGS:
             raise MercuryError(Ret.INVALID_ARG, f"proc_any: {t}")
         proc_uint8(p, TAGS[t])

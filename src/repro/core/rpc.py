@@ -18,6 +18,7 @@ Flow (matches Mercury):
 """
 from __future__ import annotations
 
+import copy as _copy
 import threading
 import time
 from dataclasses import dataclass
@@ -32,6 +33,23 @@ from .progress import Context
 from .types import (Callback, CallbackInfo, Flags, MercuryError, OpType,
                     REQUEST_HEADER_SIZE, RequestHeader, ResponseHeader, Ret,
                     _Counter, payload_crc32, stable_rpc_id)
+
+
+# Serialization-free self-tier dispatch (DESIGN.md §9): every listening
+# HGClass registers here under each of its SAME_PROCESS (self-tier) URIs.
+# An origin forwarding to one of these URIs hands the request/response
+# *values* across directly — no proc encode/decode, no header round trip —
+# while keeping identical Ret/cancel/deadline semantics.
+_LOCAL_DISPATCH: Dict[str, "HGClass"] = {}
+_LOCAL_LOCK = threading.Lock()
+
+
+def _local_target(uri: str) -> Optional["HGClass"]:
+    if not uri.startswith("self://"):
+        return None
+    with _LOCAL_LOCK:
+        hg = _LOCAL_DISPATCH.get(uri)
+    return hg if hg is not None and hg._listening else None
 
 
 @dataclass
@@ -75,6 +93,10 @@ class Handle:
         self._recv_op = None
         self._complete: Optional[Callable[..., None]] = None
         self._completed = False
+        # target side, self-tier fast path: set by the origin's
+        # _forward_local so respond() hands the output value straight back
+        # (no encode / expected-message send)
+        self._local_deliver: Optional[Callable[..., None]] = None
         self._lock = threading.Lock()
         self.responded = False
         # target side: a pass_handle handler sets this before returning to
@@ -104,6 +126,11 @@ class Handle:
         request header (``budget_ms``) so the target can make admission
         decisions against the time the caller is actually willing to wait."""
         hg = self.hg
+        if hg.local_dispatch:
+            thg = _local_target(self.info.addr.uri)
+            if thg is not None and thg.local_dispatch:
+                self._forward_local(thg, input_value, cb, timeout, arg)
+                return
         ctx = self.info.context
         self.cookie = hg._cookie_counter.next()
         payload = hg_proc.encode(self.rpc.in_proc, input_value)
@@ -212,6 +239,99 @@ class Handle:
 
         hg.na.msg_send_unexpected(self.info.addr, msg, self.cookie, on_sent)
 
+    def _forward_local(self, thg: "HGClass", input_value: Any,
+                       cb: Optional[Callback], timeout: Optional[float],
+                       arg: Any) -> None:
+        """Self-tier fast path (DESIGN.md §9): origin and target share this
+        process, so the request/response *values* are handed across
+        directly — no proc encode/decode, no header pack/unpack, no
+        progress-thread round trip.  Semantics match the wire path: same
+        Ret codes, exactly-once completion, and cancel()/deadline behave
+        identically (a response racing a cancel wins whichever grabs the
+        completion lock first).
+
+        Value isolation: the wire path serializes, so mutations on either
+        side never alias.  That guarantee is kept by deep-copying the
+        values unless *both* classes opted out (``copy_local=False`` with
+        checksums off)."""
+        hg = self.hg
+        ctx = self.info.context
+        self.cookie = hg._cookie_counter.next()
+        budget_ms = 0
+        if timeout is not None and timeout > 0:
+            budget_ms = min(max(int(timeout * 1e3), 1), 0xFFFFFFFF)
+        copy = (hg.checksum_payloads or hg.copy_local
+                or thg.checksum_payloads or thg.copy_local)
+
+        def complete(ret: Ret, output: Any = None):
+            with self._lock:
+                if self._completed:
+                    return
+                self._completed = True
+            self.ret = ret
+            self.output = output
+            if self._deadline_entry is not None:
+                ctx.disarm(self._deadline_entry)
+            if cb is not None:
+                cb(CallbackInfo(OpType.FORWARD, ret, handle=self, arg=arg))
+
+        self._complete = complete
+
+        tinfo = thg.registered.get(self.rpc.rpc_id)
+        if tinfo is None or tinfo.handler is None:
+            complete(Ret.SUCCESS if self.rpc.no_response else Ret.NOENTRY)
+            return
+
+        if timeout is not None and not self.rpc.no_response:
+            self._deadline_entry = ctx.add_deadline(
+                time.monotonic() + timeout, lambda: complete(Ret.TIMEOUT))
+
+        # reply-to address for the target handle (origin/target symmetry:
+        # the handler may forward back to us through the same machinery)
+        local = hg.na.local_uris()
+        origin_addr = self.info.addr
+        if local:
+            try:
+                origin_addr = thg.na.addr_lookup(local[0])
+            except MercuryError:
+                pass
+
+        th = Handle(thg, HandleInfo(origin_addr, self.rpc.rpc_id,
+                                    thg.context), tinfo)
+        th.cookie = self.cookie
+        th.budget_ms = budget_ms
+        th.arrived = time.monotonic()
+        th._input = _copy.deepcopy(input_value) if copy else input_value
+        th._input_decoded = True
+
+        def deliver(ret: Ret, output: Any):
+            if ret == Ret.SUCCESS:
+                complete(Ret.SUCCESS,
+                         _copy.deepcopy(output) if copy else output)
+            else:
+                # wire parity: error responses carry only str(output)
+                complete(ret, None if output is None else str(output))
+
+        th._local_deliver = deliver
+
+        if self.rpc.no_response:
+            # fire-and-forget: "handed over" is what SUCCESS means on the
+            # wire path too (send completion, not handler completion)
+            complete(Ret.SUCCESS)
+
+        # The handler runs on the calling thread; Engine-registered
+        # non-inline handlers immediately hop to the worker pool, so slow
+        # work never blocks forward() (and deadlines still fire from the
+        # progress thread).  Error mapping mirrors _dispatch's run().
+        try:
+            tinfo.handler(th)
+        except MercuryError as e:
+            if not tinfo.no_response and not th.responded:
+                th.respond(str(e), ret=e.ret)
+        except Exception as e:
+            if not tinfo.no_response and not th.responded:
+                th.respond(f"{type(e).__name__}: {e}", ret=Ret.FAULT)
+
     def cancel(self) -> None:
         """Cancel an in-flight forward.  The forward's completion callback
         fires with ``Ret.CANCELED`` (exactly once — a response racing the
@@ -256,6 +376,14 @@ class Handle:
             raise MercuryError(Ret.INVALID_ARG, "RPC registered as NO_RESPONSE")
         if self.responded:
             raise MercuryError(Ret.INVALID_ARG, "respond() called twice")
+        if self._local_deliver is not None:
+            # self-tier fast path: hand the output value straight to the
+            # origin's completion (no encode, no expected-message send)
+            self.responded = True
+            self._local_deliver(ret, output)
+            if cb is not None:
+                cb(CallbackInfo(OpType.RESPOND, Ret.SUCCESS, handle=self))
+            return
         hg = self.hg
         if ret == Ret.SUCCESS:
             payload = hg_proc.encode(self.rpc.out_proc, output) \
@@ -284,15 +412,25 @@ class HGClass:
     the default execution context (more can be created)."""
 
     def __init__(self, na: NAPlugin, checksum_payloads: bool = True,
-                 unexpected_prepost: int = 8):
+                 unexpected_prepost: int = 8, copy_local: bool = True,
+                 local_dispatch: bool = True):
         self.na = na
         self.checksum_payloads = checksum_payloads
+        # Self-tier fast path knobs (DESIGN.md §9): ``local_dispatch``
+        # gates the serialization-free in-process path entirely;
+        # ``copy_local`` keeps wire-equivalent value isolation on it
+        # (deep-copy request/response values).  ``copy_local=False`` with
+        # checksums off on both sides yields true zero-copy handoff —
+        # caller and handler then share the objects.
+        self.copy_local = copy_local
+        self.local_dispatch = local_dispatch
         self.registered: Dict[int, RPCInfo] = {}
         self._by_name: Dict[str, RPCInfo] = {}
         self._cookie_counter = _Counter()
         self.context = Context(na)
         self._unexpected_prepost = unexpected_prepost
         self._listening = False
+        self._local_uris: list = []
 
     # -- registration -----------------------------------------------------------
     def register(self, name: str,
@@ -333,6 +471,12 @@ class HGClass:
         if self._listening:
             return
         self._listening = True
+        if self.local_dispatch:
+            uris = self.na.local_uris()
+            with _LOCAL_LOCK:
+                for u in uris:
+                    _LOCAL_DISPATCH[u] = self
+            self._local_uris = uris
         for _ in range(self._unexpected_prepost):
             self._post_unexpected()
 
@@ -446,4 +590,10 @@ class HGClass:
 
     def finalize(self) -> None:
         self._listening = False
+        if self._local_uris:
+            with _LOCAL_LOCK:
+                for u in self._local_uris:
+                    if _LOCAL_DISPATCH.get(u) is self:
+                        del _LOCAL_DISPATCH[u]
+            self._local_uris = []
         self.na.finalize()

@@ -15,6 +15,7 @@ from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
                      NonRetryable, RetryPolicy, call_with_budget)
 from .pool import PoolError, Replica, ServicePool
+from .readcache import ReadCache, args_digest
 from .registry import (RegistryClient, RegistryService, ServiceInstance,
                        resolve_service_uris)
 from .replication import (PeerTracker, QuorumCaller, ReplicatedTable,
@@ -28,5 +29,5 @@ __all__ = [
     "ServicePool", "PoolError", "Replica", "RegistryService",
     "RegistryClient", "ServiceInstance", "resolve_service_uris",
     "PeerTracker", "QuorumCaller", "ReplicatedTable", "ReplicationCore",
-    "parse_registry_uris",
+    "parse_registry_uris", "ReadCache", "args_digest",
 ]

@@ -207,13 +207,24 @@ class ServicePool:
                  refresh_interval: float = 0.25,
                  load_refresh_interval: float = 1.0,
                  default_timeout: float = 30.0,
-                 down_ttl: float = 2.0):
+                 down_ttl: float = 2.0,
+                 cache_ttl: Optional[float] = None):
         self.engine = engine
         self.service = service
         # short control-plane timeout: a dead registry must not stall the
         # data path (stale cached views keep routing).  registry_uri may
         # be the whole replica set; the client fails over between them.
-        self.registry = RegistryClient(engine, registry_uri, timeout=2.0)
+        # The client-side read cache (DESIGN.md §9) collapses concurrent
+        # refresh storms — hedged attempts and many caller threads all
+        # force-refreshing at once singleflight into one fab.resolve —
+        # and its TTL (default: half the refresh interval, so it never
+        # adds more than one poll period of staleness) soaks up repeat
+        # polls between ticks.  Correctness does not rest on the TTL:
+        # every epoch bump or nonce change the client observes evicts.
+        if cache_ttl is None:
+            cache_ttl = refresh_interval / 2
+        self.registry = RegistryClient(engine, registry_uri, timeout=2.0,
+                                       cache_ttl=cache_ttl)
         self.balancer = make_balancer(balancer)
         self.policy = policy or RetryPolicy()
         self.credits_per_target = credits_per_target
@@ -262,7 +273,10 @@ class ServicePool:
                 epoch, nonce = self.registry.epoch_info()
                 if epoch == self._view_epoch and nonce == self._view_nonce:
                     return
-            view = self.registry.resolve(self.service)
+            # forced refreshes (retry/failover paths) must see the
+            # authority — bypass the read cache but still singleflight
+            view = self.registry.resolve(self.service,
+                                         fresh=force or load_due)
         except MercuryError:
             return                        # registry briefly unreachable
         with self._view_lock:

@@ -65,6 +65,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from ..core.executor import Engine
 from ..core.na.multi import parse_addr_set
 from ..core.types import MercuryError, Ret
+from .readcache import ReadCache
 from .replication import (QuorumCaller, ReplicationCore,
                           parse_registry_uris)
 
@@ -325,13 +326,24 @@ class RegistryClient:
     replica (list, or one comma-separated string); the underlying
     :class:`~repro.fabric.replication.QuorumCaller` sticks to the
     endpoint that last answered and rotates on transport-class
-    failures."""
+    failures.
 
-    def __init__(self, engine: Engine, registry_uri, timeout: float = 10.0):
+    ``cache_ttl > 0`` turns on the client-side idempotent read cache
+    (DESIGN.md §9): ``fab.resolve``/``fab.epoch``/``fab.services`` hits
+    within the TTL are served locally as long as the registry's
+    ``(nonce, epoch)`` token has not advanced — every response and every
+    write observes the token, so an epoch bump or a leader failover
+    (nonce change) evicts immediately and no read is ever served from a
+    superseded epoch stream.  ``fresh=True`` on a read bypasses the
+    cached value for callers that must see the authority."""
+
+    def __init__(self, engine: Engine, registry_uri, timeout: float = 10.0,
+                 cache_ttl: float = 0.0):
         self.engine = engine
         self._caller = QuorumCaller(engine, registry_uri, timeout=timeout)
         self.uris = self._caller.uris
         self.timeout = timeout
+        self.cache = ReadCache(ttl=cache_ttl)
 
     @property
     def registry(self) -> str:
@@ -341,6 +353,10 @@ class RegistryClient:
     def _call(self, name: str, req: dict):
         return self._caller.call(name, req)
 
+    @staticmethod
+    def _token_of(out: dict):
+        return out.get("nonce"), out["epoch"]
+
     def register(self, service: str, uris, capacity: int = 0,
                  load: float = 0.0, iid: Optional[str] = None,
                  member_id: Optional[str] = None) -> str:
@@ -348,33 +364,48 @@ class RegistryClient:
             "service": service, "uris": uris, "capacity": capacity,
             "load": load, "iid": iid, "member_id": member_id,
         })
+        # read-your-writes: an epoch bumped by our own write evicts any
+        # cached view immediately (no waiting out the TTL)
+        self.cache.observe_epoch(out["epoch"])
         return out["iid"]
 
     def deregister(self, service: str, iid: str) -> bool:
-        return self._call("fab.deregister",
-                          {"service": service, "iid": iid})["ok"]
+        out = self._call("fab.deregister", {"service": service, "iid": iid})
+        self.cache.observe_epoch(out["epoch"])
+        return out["ok"]
 
     def report(self, service: str, iid: str, load: float,
                capacity: Optional[int] = None) -> int:
         req = {"service": service, "iid": iid, "load": load}
         if capacity is not None:
             req["capacity"] = capacity
-        return self._call("fab.report", req)["epoch"]
+        epoch = self._call("fab.report", req)["epoch"]
+        self.cache.observe_epoch(epoch)
+        return epoch
 
-    def resolve(self, service: str) -> dict:
-        return self._call("fab.resolve", {"service": service})
+    def resolve(self, service: str, fresh: bool = False) -> dict:
+        return self.cache.get_or_call(
+            "fab.resolve", {"service": service},
+            lambda: self._call("fab.resolve", {"service": service}),
+            fresh=fresh, token_of=self._token_of)
 
-    def services(self) -> List[str]:
-        return self._call("fab.services", {})["services"]
+    def services(self, fresh: bool = False) -> List[str]:
+        return self.cache.get_or_call(
+            "fab.services", {},
+            lambda: self._call("fab.services", {}),
+            fresh=fresh)["services"]
 
-    def epoch(self) -> int:
-        return self._call("fab.epoch", {})["epoch"]
+    def epoch(self, fresh: bool = False) -> int:
+        return self.epoch_info(fresh=fresh)[0]
 
-    def epoch_info(self) -> Tuple[int, Optional[str]]:
+    def epoch_info(self, fresh: bool = False) -> Tuple[int, Optional[str]]:
         """(epoch, nonce) — the cheap staleness poll.  Epochs from
         different nonces are not comparable (registry restarted, or the
         lease failed over to a new leader)."""
-        out = self._call("fab.epoch", {})
+        out = self.cache.get_or_call(
+            "fab.epoch", {},
+            lambda: self._call("fab.epoch", {}),
+            fresh=fresh, token_of=self._token_of)
         return out["epoch"], out.get("nonce")
 
     def status(self) -> dict:

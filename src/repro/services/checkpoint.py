@@ -119,9 +119,16 @@ class CheckpointServer:
 
 class CheckpointClient:
     def __init__(self, engine: Engine, server_uri: Optional[str] = None,
-                 registry: Optional[str] = None, service: str = "ckpt"):
+                 registry: Optional[str] = None, service: str = "ckpt",
+                 cache_ttl: float = 0.0):
         """Address either directly (``server_uri``) or by service name
-        through the fabric registry (``registry=`` + ``service=``)."""
+        through the fabric registry (``registry=`` + ``service=``).
+
+        ``cache_ttl > 0`` caches ``ckpt.list`` reads (DESIGN.md §9):
+        the server has no epoch stream, so validity is TTL-bounded plus
+        self-invalidation — this client's own ``save``/``delete`` drop
+        the cache immediately (read-your-writes), while other writers'
+        checkpoints appear within the TTL."""
         self.engine = engine
         if server_uri is None:
             if registry is None:
@@ -129,6 +136,8 @@ class CheckpointClient:
             from ..fabric.registry import resolve_service_uris
             server_uri = resolve_service_uris(engine, registry, service)[0]
         self.server = server_uri
+        from ..fabric.readcache import ReadCache
+        self.cache = ReadCache(ttl=cache_ttl)
         self._pool = cf.ThreadPoolExecutor(max_workers=1,
                                            thread_name_prefix="ckpt-async")
 
@@ -138,11 +147,13 @@ class CheckpointClient:
         handle = self.engine.expose(list(named.values()), read=True,
                                     write=False)
         try:
-            return self.engine.call(self.server, "ckpt.put", {
+            out = self.engine.call(self.server, "ckpt.put", {
                 "name": name, "step": step, "manifest": man,
                 "desc": handle.descriptor().to_bytes(),
                 "origin": self.engine.uri,
             }, timeout=120.0)
+            self.cache.invalidate()       # read-your-writes for list()
+            return out
         finally:
             handle.free()
 
@@ -155,11 +166,13 @@ class CheckpointClient:
             handle = self.engine.expose(list(named.values()), read=True,
                                         write=False)
             try:
-                return self.engine.call(self.server, "ckpt.put", {
+                out = self.engine.call(self.server, "ckpt.put", {
                     "name": name, "step": step, "manifest": man,
                     "desc": handle.descriptor().to_bytes(),
                     "origin": self.engine.uri,
                 }, timeout=120.0)
+                self.cache.invalidate()   # read-your-writes for list()
+                return out
             finally:
                 handle.free()
 
@@ -181,5 +194,14 @@ class CheckpointClient:
         verify_manifest(man, named)
         return unflatten_named(template, named), meta["step"]
 
-    def list(self) -> list:
-        return self.engine.call(self.server, "ckpt.list", {})["checkpoints"]
+    def delete(self, name: str, step: int) -> bool:
+        ok = self.engine.call(self.server, "ckpt.delete",
+                              {"name": name, "step": step})["ok"]
+        self.cache.invalidate()           # read-your-writes for list()
+        return ok
+
+    def list(self, fresh: bool = False) -> list:
+        return self.cache.get_or_call(
+            "ckpt.list", {},
+            lambda: self.engine.call(self.server, "ckpt.list", {}),
+            fresh=fresh)["checkpoints"]

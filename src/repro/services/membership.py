@@ -33,6 +33,7 @@ import threading
 from typing import Callable, Dict, List, Optional
 
 from ..core.executor import Engine
+from ..fabric.readcache import ReadCache
 from ..fabric.replication import QuorumCaller, ReplicationCore
 
 
@@ -158,16 +159,24 @@ class MembershipClient:
     on dead-peer detection — any quorum node serves views and proxies
     writes to the leaseholder.  Heartbeats carry the member's join
     metadata so an expiry-then-reannounce round trip (e.g. a long GC
-    pause) restores it instead of rejoining with ``meta={}``."""
+    pause) restores it instead of rejoining with ``meta={}``.
+
+    ``cache_ttl > 0`` turns on the idempotent read cache for
+    ``mem.view`` (DESIGN.md §9): repeat ``current_view()`` calls within
+    the TTL are served locally, evicted the moment any view the client
+    sees — including its own heartbeats — carries a newer
+    ``(nonce, epoch)``."""
 
     def __init__(self, engine: Engine, server_uri, member_id: str,
                  heartbeat_interval: float = 0.5,
-                 on_change: Optional[Callable[[dict], None]] = None):
+                 on_change: Optional[Callable[[dict], None]] = None,
+                 cache_ttl: float = 0.0):
         self.engine = engine
         self._caller = QuorumCaller(engine, server_uri, timeout=5.0)
         self.member_id = member_id
         self.interval = heartbeat_interval
         self.on_change = on_change
+        self.cache = ReadCache(ttl=cache_ttl)
         self.meta: dict = {}
         self.view: dict = {}
         self._stop = threading.Event()
@@ -178,11 +187,16 @@ class MembershipClient:
         """The currently preferred endpoint (observability/tests)."""
         return self._caller.current
 
+    @staticmethod
+    def _token_of(view: dict):
+        return view.get("nonce"), view["epoch"]
+
     def join(self, meta: Optional[dict] = None) -> dict:
         self.meta = meta or {}
         self.view = self._caller.call("mem.join", {
             "member_id": self.member_id, "uri": self.engine.uri,
             "meta": self.meta})
+        self.cache.observe(*self._token_of(self.view))
         self._thread = threading.Thread(target=self._beat, daemon=True)
         self._thread.start()
         return self.view
@@ -196,6 +210,7 @@ class MembershipClient:
                                           "meta": self.meta})
             except Exception:
                 continue
+            self.cache.observe(*self._token_of(view))
             # epochs are only comparable within one (nonce) stream: a
             # coordinator restart or quorum failover mints a new nonce
             # and must fire on_change even if the epoch looks equal/lower
@@ -205,8 +220,10 @@ class MembershipClient:
                 self.on_change(view)
             self.view = view
 
-    def current_view(self) -> dict:
-        return self._caller.call("mem.view", {})
+    def current_view(self, fresh: bool = False) -> dict:
+        return self.cache.get_or_call(
+            "mem.view", {}, lambda: self._caller.call("mem.view", {}),
+            fresh=fresh, token_of=self._token_of)
 
     def leave(self):
         self._stop.set()

@@ -152,3 +152,99 @@ def test_hedge_cancel_storm_conserves_credits(rng):
     assert st["acquired"] == st["released"] == n_threads * per_thread
     assert st["inflight"] == 0 and g.inflight == 0
     assert g.min_credits <= g.credits <= g.max_credits
+
+
+def test_hedged_reads_collapse_and_never_poison():
+    """Hedge/read-cache interplay (DESIGN.md §9): a storm of concurrent
+    idempotent reads collapses to one registry round-trip (the winner
+    populates the cache exactly once); fetches that fail CANCELED — the
+    hedged loser's fate — propagate to their waiters and never leave an
+    entry behind; and the client's own write evicts immediately, so no
+    read after it ever sees the pre-write view."""
+    from repro.core.executor import Engine
+    from repro.core.types import MercuryError, Ret
+    from repro.fabric.registry import RegistryClient, RegistryService
+
+    with Engine(None) as e:
+        reg = RegistryService(e)
+        try:
+            client = RegistryClient(e, e.uri, cache_ttl=60.0)
+            client.register("svc", ["self://inst-a"], iid="aaaaaaaaaaaa")
+
+            # count true server-side resolves (registry round-trips)
+            info = e.hg._by_name["fab.resolve"]
+            orig_handler = info.handler
+            served = [0]
+
+            def counting(handle):
+                served[0] += 1
+                orig_handler(handle)
+
+            info.handler = counting
+
+            # phase A — collapse: warm once, then storm cached reads
+            client.resolve("svc")
+            warm = served[0]
+            errors = []
+
+            def read_storm():
+                try:
+                    for _ in range(50):
+                        view = client.resolve("svc")
+                        assert len(view["instances"]) == 1
+                except Exception as err:    # noqa: BLE001 — surfaced below
+                    errors.append(repr(err))
+
+            threads = [threading.Thread(target=read_storm) for _ in range(8)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(timeout=30)
+            assert not errors, errors
+            assert served[0] == warm        # exactly-once population held
+
+            # phase B — canceled losers never poison: half the fetches
+            # die CANCELED mid-flight (the hedge loser's error class)
+            orig_call = client._caller.call
+            flake = {"on": True}
+
+            def flaky_call(name, req, seq=[0]):
+                seq[0] += 1
+                if flake["on"] and seq[0] % 2:
+                    raise MercuryError(Ret.CANCELED, "hedge loser canceled")
+                return orig_call(name, req)
+
+            client._caller.call = flaky_call
+            outcomes = {"ok": 0, "canceled": 0}
+            lock = threading.Lock()
+
+            def hedge_storm():
+                for _ in range(20):
+                    try:
+                        view = client.resolve("svc", fresh=True)
+                        assert len(view["instances"]) == 1
+                        with lock:
+                            outcomes["ok"] += 1
+                    except MercuryError as err:
+                        assert err.ret == Ret.CANCELED
+                        with lock:
+                            outcomes["canceled"] += 1
+
+            threads = [threading.Thread(target=hedge_storm)
+                       for _ in range(4)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(timeout=30)
+            assert outcomes["ok"] > 0 and outcomes["canceled"] > 0
+            flake["on"] = False
+            # whatever the storm left cached must be a winner's view
+            assert len(client.resolve("svc")["instances"]) == 1
+
+            # phase C — read-your-writes: our own register bumps the
+            # epoch, which must evict instantly (TTL is 60s — only token
+            # invalidation can explain the fresh view)
+            client.register("svc", ["self://inst-b"], iid="bbbbbbbbbbbb")
+            assert len(client.resolve("svc")["instances"]) == 2
+        finally:
+            reg.close()

@@ -101,6 +101,49 @@ def test_zero_copy_decode_views_buffer():
     assert not out.flags["OWNDATA"]          # view into the message buffer
 
 
+def test_large_bytes_decode_is_zero_copy():
+    """Regression for the decode double-copy: a >= ZEROCOPY_MIN bytes
+    field must come back as a read-only view into the message buffer,
+    not a copy (the old path paid bytes(read()) AND the read() slice)."""
+    blob = bytes(range(256)) * 64            # 16 KiB >= ZEROCOPY_MIN
+    data = bytes(proc.encode(proc.proc_bytes, blob))
+    out = proc.decode(proc.proc_bytes, data)
+    assert isinstance(out, memoryview) and out.readonly
+    assert out == blob
+    # buffer identity: the view aliases `data`, no private allocation
+    base = np.frombuffer(data, np.uint8)
+    view = np.frombuffer(out, np.uint8)
+    assert np.shares_memory(base, view)
+
+
+def test_small_bytes_decode_stays_bytes():
+    """Small fields stay plain bytes: a view would pin the whole message
+    buffer alive for a handful of bytes."""
+    out = proc.decode(proc.proc_bytes, proc.encode(proc.proc_bytes, b"abc"))
+    assert isinstance(out, bytes) and out == b"abc"
+
+
+def test_large_encode_returns_view_not_copy():
+    """Regression for the encode full-copy: past ENCODE_VIEW_MIN the
+    encoder must hand out a view of its build buffer, not a getvalue()
+    duplicate of the whole payload."""
+    big = {"blob": b"\x5a" * (2 * proc.ENCODE_VIEW_MIN)}
+    enc = proc.encode(proc.proc_any, big)
+    assert isinstance(enc, memoryview)
+    small = proc.encode(proc.proc_any, {"x": 1})
+    assert isinstance(small, bytes)
+
+
+def test_decoded_view_reencodes_as_bytes():
+    """proc_any must accept the memoryviews its own decode now returns
+    (proxy paths re-encode decoded requests verbatim)."""
+    blob = b"\x11" * (2 * proc.ZEROCOPY_MIN)
+    v = proc.decode(proc.proc_any, proc.encode(proc.proc_any, {"b": blob}))
+    assert isinstance(v["b"], memoryview)
+    again = proc.decode(proc.proc_any, proc.encode(proc.proc_any, v))
+    assert bytes(again["b"]) == blob
+
+
 # ---------------------------------------------------------------------------
 # Hypothesis-style properties (seeded-random fallback, see proptest.py)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,202 @@
+"""ReadCache unit semantics: TTL and token invalidation, singleflight
+collapse, error/cancel non-poisoning, eviction bounds (DESIGN.md §9)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.types import MercuryError, Ret
+from repro.fabric.readcache import ReadCache, args_digest
+
+
+class Counter:
+    def __init__(self, value="v"):
+        self.calls = 0
+        self.value = value
+        self._lock = threading.Lock()
+
+    def __call__(self):
+        with self._lock:
+            self.calls += 1
+        return self.value
+
+
+def test_hit_within_ttl_and_token():
+    c = ReadCache(ttl=5.0)
+    c.observe("n1", 1)
+    f = Counter()
+    assert c.get_or_call("m", {"k": 1}, f) == "v"
+    assert c.get_or_call("m", {"k": 1}, f) == "v"
+    assert f.calls == 1
+    st = c.stats()
+    assert st["hits"] == 1 and st["misses"] == 1
+
+
+def test_distinct_args_distinct_entries():
+    c = ReadCache(ttl=5.0)
+    f = Counter()
+    c.get_or_call("m", {"k": 1}, f)
+    c.get_or_call("m", {"k": 2}, f)
+    c.get_or_call("m", {"k": 1}, f)
+    assert f.calls == 2
+    assert args_digest("m", {"k": 1}) != args_digest("m", {"k": 2})
+    assert args_digest("m", {"k": 1}) == args_digest("m", {"k": 1})
+
+
+def test_ttl_expiry_evicts():
+    c = ReadCache(ttl=0.05)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    time.sleep(0.08)
+    c.get_or_call("m", {}, f)
+    assert f.calls == 2
+
+
+def test_epoch_bump_evicts():
+    c = ReadCache(ttl=60.0)
+    c.observe("n1", 1)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    assert c.observe("n1", 2)             # epoch bump on same nonce
+    c.get_or_call("m", {}, f)
+    assert f.calls == 2
+
+
+def test_nonce_change_evicts_even_with_lower_epoch():
+    """A registry restart resets the epoch to 0 under a fresh nonce —
+    that MUST evict (a bare epoch comparison would read it as stale)."""
+    c = ReadCache(ttl=60.0)
+    c.observe("n1", 100)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    assert c.observe("n2", 0)
+    c.get_or_call("m", {}, f)
+    assert f.calls == 2
+
+
+def test_stale_epoch_observation_ignored():
+    c = ReadCache(ttl=60.0)
+    c.observe("n1", 5)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    assert not c.observe("n1", 3)         # older read racing in: ignored
+    c.get_or_call("m", {}, f)
+    assert f.calls == 1
+
+
+def test_fresh_bypasses_but_repopulates():
+    c = ReadCache(ttl=60.0)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    c.get_or_call("m", {}, f, fresh=True)
+    assert f.calls == 2
+    c.get_or_call("m", {}, f)             # repopulated by the fresh read
+    assert f.calls == 2
+
+
+def test_ttl_zero_disables_caching():
+    c = ReadCache(ttl=0.0)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    c.get_or_call("m", {}, f)
+    assert f.calls == 2
+
+
+def test_singleflight_collapses_concurrent_misses():
+    c = ReadCache(ttl=60.0)
+    started = threading.Event()
+    release = threading.Event()
+    calls = [0]
+
+    def slow_fetch():
+        calls[0] += 1
+        started.set()
+        release.wait(5.0)
+        return "shared"
+
+    results = []
+
+    def worker():
+        results.append(c.get_or_call("m", {}, slow_fetch))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    assert started.wait(5.0)
+    time.sleep(0.05)                      # let the others pile onto the future
+    release.set()
+    for t in threads:
+        t.join(timeout=5.0)
+    assert calls[0] == 1
+    assert results == ["shared"] * 8
+
+
+def test_error_propagates_and_is_not_cached():
+    """A failed (or canceled) fetch must reach every waiter and cache
+    nothing — the canceled loser of a hedge can never poison reads."""
+    c = ReadCache(ttl=60.0)
+    boom = Counter()
+
+    def failing():
+        boom.calls += 1
+        raise MercuryError(Ret.CANCELED, "hedge loser canceled")
+
+    for _ in range(2):
+        with pytest.raises(MercuryError):
+            c.get_or_call("m", {}, failing)
+    assert boom.calls == 2                # second call re-fetched: no entry
+    ok = Counter()
+    assert c.get_or_call("m", {}, ok) == "v"   # healthy fetch now populates
+    assert c.get_or_call("m", {}, ok) == "v"
+    assert ok.calls == 1
+
+
+def test_token_of_observes_and_caches_under_response_token():
+    """A read whose response reveals a bump both evicts older entries
+    and seeds the cache under its own token."""
+    c = ReadCache(ttl=60.0)
+    c.observe("n1", 1)
+    old = Counter("old")
+    c.get_or_call("other", {}, old)
+
+    f = Counter({"nonce": "n1", "epoch": 2, "data": 1})
+    tok = lambda v: (v["nonce"], v["epoch"])
+    c.get_or_call("m", {}, f, token_of=tok)
+    assert c.stats()["token"]["epoch"] == 2
+    c.get_or_call("m", {}, f, token_of=tok)
+    assert f.calls == 1                   # cached under its own token
+    c.get_or_call("other", {}, old)
+    assert old.calls == 2                 # older-token entry was evicted
+
+
+def test_invalidate_drops_without_token_advance():
+    c = ReadCache(ttl=60.0)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    c.invalidate()
+    c.get_or_call("m", {}, f)
+    assert f.calls == 2
+
+
+def test_max_entries_bounds_cache():
+    c = ReadCache(ttl=60.0, max_entries=4)
+    f = Counter()
+    for i in range(10):
+        c.get_or_call("m", {"k": i}, f)
+    assert len(c) <= 4
+
+
+def test_population_raced_by_observe_does_not_stick():
+    """A fetch that straddles a token bump must not populate: the result
+    may be from either side of the bump."""
+    c = ReadCache(ttl=60.0)
+    c.observe("n1", 1)
+
+    def fetch_and_bump():
+        c.observe("n1", 2)                # authority moved mid-fetch
+        return "ambiguous"
+
+    c.get_or_call("m", {}, fetch_and_bump)
+    f = Counter()
+    c.get_or_call("m", {}, f)
+    assert f.calls == 1                   # ambiguous result was NOT cached

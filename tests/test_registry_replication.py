@@ -334,6 +334,81 @@ def test_restarted_leader_resyncs_before_reclaiming_lease(cluster):
 
 
 # ---------------------------------------------------------------------------
+# client read cache vs the replicated control plane (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def test_read_cache_invalidation_across_failover(cluster):
+    """Each invalidation trigger — epoch bump, TTL expiry, nonce change
+    (leaseholder failover) — must evict the client read cache, and no
+    read after the failover may be served from the dead leader's epoch
+    stream."""
+    engines, peers, regs = cluster
+    with Engine("tcp://127.0.0.1:0") as cli, \
+            Engine("tcp://127.0.0.1:0") as cli2:
+        # 60s TTL: within this test only *token* invalidation can evict
+        cached = RegistryClient(cli, peers, cache_ttl=60.0)
+        writer = RegistryClient(cli2, peers)   # its writes are invisible
+                                               # to `cached`'s token
+        iids = ["aaaaaaaaaaaa", "bbbbbbbbbbbb", "cccccccccccc"]
+        writer.register("svc", "tcp://127.0.0.1:4441", iid=iids[0])
+        _wait(lambda: cached.resolve("svc", fresh=True)["instances"],
+              msg="initial view")
+        assert len(cached.resolve("svc")["instances"]) == 1   # cached now
+
+        def keepalive(known):
+            # same-iid/same-uris re-register refreshes the instance TTL
+            # stamp without bumping the epoch (see RegistryService)
+            for i, iid in enumerate(iids[:known]):
+                writer.register("svc", f"tcp://127.0.0.1:444{i + 1}",
+                                iid=iid)
+
+        # --- epoch bump (another client's write) evicts via the poll
+        writer.register("svc", "tcp://127.0.0.1:4442", iid=iids[1])
+
+        def sees_two():
+            keepalive(2)
+            cached.epoch_info(fresh=True)      # observe the authority
+            return len(cached.resolve("svc")["instances"]) == 2
+
+        _wait(sees_two, msg="epoch-bump eviction")
+
+        # --- TTL expiry evicts with no token feed at all
+        short = RegistryClient(cli, peers, cache_ttl=0.15)
+        _wait(lambda: len(short.resolve("svc", fresh=True)["instances"]) == 2,
+              msg="short-ttl warm view")
+        writer.register("svc", "tcp://127.0.0.1:4443", iid=iids[2])
+
+        def ttl_sees_three():
+            keepalive(3)
+            # no fresh=, no observe: only TTL lapse explains a refetch
+            return len(short.resolve("svc")["instances"]) == 3
+        _wait(ttl_sees_three, msg="TTL-expiry eviction")
+
+        # --- leaseholder kill: nonce change must evict, and no read
+        # may come from the dead leader's stream afterwards
+        regs[0].close()
+        engines[0].shutdown()
+        _wait(lambda: regs[1].is_leader, msg="rank-1 takeover")
+
+        def resynced():
+            try:
+                keepalive(3)
+                _, nonce = cached.epoch_info(fresh=True)
+            except MercuryError:
+                return False                   # failing over between replicas
+            if nonce != regs[1].nonce:
+                return False                   # survivors still converging
+            view = cached.resolve("svc")       # served under the new token
+            return (view.get("nonce") == regs[1].nonce
+                    and len(view["instances"]) == 3)
+
+        _wait(resynced, msg="cache resync onto survivor stream")
+        # the cache token itself moved onto the survivor's stream, and
+        # every cached entry from the dead leader's nonce is gone
+        assert cached.cache.stats()["token"]["nonce"] == regs[1].nonce
+        assert cached.resolve("svc")["nonce"] == regs[1].nonce
+
+
+# ---------------------------------------------------------------------------
 # ReplicatedTable: version stamps, deltas, tombstone horizon (pure)
 # ---------------------------------------------------------------------------
 def test_replicated_table_delta_roundtrip():

@@ -102,3 +102,93 @@ def test_large_eager_payload(engines):
     srv.register("blob", lambda x: np.asarray(x).sum())
     a = np.ones(200_000, dtype=np.float64)      # 1.6 MB inline
     assert cli.call(srv.uri, "blob", a, timeout=30) == 200_000.0
+
+
+# ---------------------------------------------------------------------------
+# Self-tier fast path (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def test_local_dispatch_value_isolation():
+    """Default self-tier calls keep wire semantics: handler mutations of
+    the request never alias the caller's object, and the response is
+    likewise isolated."""
+    with Engine(None) as e:
+        state = {}
+
+        def grab(v):
+            state["got"] = v
+            v["mutated"] = True
+            return {"r": [1, 2]}
+
+        e.register("grab", grab)
+        arg = {"x": 1}
+        out = e.call(e.uri, "grab", arg)
+        assert "mutated" not in arg            # request deep-copied
+        assert state["got"] is not arg
+        out["r"].append(3)
+        assert e.call(e.uri, "grab", {"x": 2})["r"] == [1, 2]
+
+
+def test_local_dispatch_zero_copy_opt_out():
+    """checksum=False + copy_local=False: the handler receives the very
+    object the caller passed, and the caller receives the very object
+    the handler returned — no serialization, no copy."""
+    with Engine(None, checksum=False, copy_local=False) as e:
+        seen = {}
+        e.register("id", lambda v: seen.setdefault("v", v))
+        arg = {"big": list(range(100))}
+        out = e.call(e.uri, "id", arg)
+        assert seen["v"] is arg
+        assert out is arg
+
+
+def test_local_cancel_after_delivery_settles_once():
+    """Handle.cancel() racing (or trailing) a locally-delivered response
+    must settle the future exactly once, with the winner's verdict."""
+    with Engine(None) as e:
+        e.register("ok", lambda v: v)
+        fut = e.call_async(e.uri, "ok", 7, timeout=5.0)
+        assert fut.result(timeout=5.0) == 7
+        fut.cancel_call()                      # after delivery: no-op
+        assert fut.result(timeout=1.0) == 7    # verdict unchanged
+
+        # and a cancel that genuinely wins: handler parked on an event
+        hold = threading.Event()
+        e.register("park", lambda v: hold.wait(5.0) or v)
+        fut2 = e.call_async(e.uri, "park", 1, timeout=10.0)
+        fut2.cancel_call()
+        with pytest.raises(RemoteError) as ei:
+            fut2.result(timeout=5.0)
+        assert ei.value.ret == Ret.CANCELED
+        hold.set()                             # unpark; late respond is a no-op
+        time.sleep(0.1)
+        with pytest.raises(RemoteError):
+            fut2.result(timeout=1.0)           # still CANCELED, settled once
+
+
+def test_local_cancel_storm_settles_every_future():
+    """Many concurrent cancels racing live local responses: every future
+    settles (success or CANCELED), none hangs, none settles twice."""
+    with Engine(None) as e:
+        e.register("tick", lambda v: v + 1)
+        errors = []
+
+        def storm(i):
+            try:
+                fut = e.call_async(e.uri, "tick", i, timeout=5.0)
+                if i % 2:
+                    fut.cancel_call()
+                try:
+                    out = fut.result(timeout=5.0)
+                    assert out == i + 1
+                except RemoteError as err:
+                    assert err.ret == Ret.CANCELED
+            except Exception as err:            # noqa: BLE001
+                errors.append(err)
+
+        threads = [threading.Thread(target=storm, args=(i,))
+                   for i in range(64)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10.0)
+        assert not errors
