@@ -1001,6 +1001,173 @@ def bench_cached_resolve(n_threads: int = 4, n_reads: int = 250) -> Dict:
         cli_eng.shutdown()
 
 
+def bench_trace_overhead(n_workers: int = 2, n_calls: int = 300,
+                         work_ms: float = 30.0) -> Dict:
+    """Telemetry-plane cost + cross-process reassembly (DESIGN.md §10).
+
+    Part 1 — overhead: routed-pool RTT against in-process replicas with
+    tracing *off* (machinery disabled), *unsampled* (ids propagate on
+    every hop, nothing records — the production default path), and
+    *100%-sampled*.  The three modes are interleaved **per call** —
+    off/unsampled/sampled back to back for every call index — so each
+    triplet shares its ambient load, and the overhead is the median of
+    the *paired* per-call differences.  Scheduler noise that swings
+    loopback RTTs by tens of percent cancels pairwise; the ≤5%
+    unsampled budget is asserted on that paired median.
+
+    Part 2 — reassembly: a hedged call against subprocess replicas
+    (hedge delay ≪ service time, so both are always contacted), 100%
+    sampled; the span tree is reassembled by unioning ``dbg.trace``
+    rings from every worker with the client's own and must form ONE
+    connected tree spanning client + both workers, with the hedge
+    loser's attempt span closed CANCELED.  Run via
+    ``--only trace_overhead``.
+    """
+    from contextlib import ExitStack
+
+    from repro.fabric import (RegistryService, RetryPolicy, ServiceInstance,
+                              ServicePool)
+    from repro.telemetry import trace
+
+    out: Dict = {"name": "trace_overhead", "calls_per_mode": n_calls}
+    prev_sample, prev_enabled = trace.sample_rate(), trace.is_enabled()
+    modes = ("off", "unsampled", "sampled")
+
+    def _mode(m):
+        if m == "off":
+            trace.configure(enabled=False)
+        else:
+            trace.configure(enabled=True,
+                            sample=0.0 if m == "unsampled" else 1.0)
+
+    # ---- part 1: interleaved RTT medians, in-process replicas ----------
+    lat = {m: [] for m in modes}
+    with Engine("tcp://127.0.0.1:0") as reg_eng:
+        registry = RegistryService(reg_eng, instance_ttl=10.0)
+        reps = [Engine("tcp://127.0.0.1:0") for _ in range(n_workers)]
+        insts = []
+        try:
+            for r in reps:
+                r.register("work", lambda x: x)
+                insts.append(ServiceInstance(r, reg_eng.uri, "bench-trace",
+                                             capacity=8,
+                                             report_interval=0.5))
+            with Engine("tcp://127.0.0.1:0") as cli:
+                pool = ServicePool(cli, reg_eng.uri, "bench-trace",
+                                   balancer="rr",
+                                   policy=RetryPolicy(attempts=3,
+                                                      rpc_timeout=10.0))
+                payload = b"x" * 64
+                for _ in range(20):                        # warm all paths
+                    pool.call("work", payload, timeout=10)
+                for i in range(n_calls):
+                    # rotate which mode leads so ordering bias cancels
+                    for m in (modes[i % 3:] + modes[:i % 3]):
+                        _mode(m)
+                        t0 = time.perf_counter()
+                        pool.call("work", payload, timeout=10)
+                        lat[m].append(time.perf_counter() - t0)
+        finally:
+            trace.configure(sample=prev_sample, enabled=prev_enabled)
+            for i in insts:
+                i.close()
+            for r in reps:
+                r.shutdown()
+            registry.close()
+
+    for m in modes:
+        out[f"{m}_rtt_us"] = statistics.median(lat[m]) * 1e6
+    base = out["off_rtt_us"]
+    for m in ("unsampled", "sampled"):
+        paired_us = statistics.median(
+            (b - a) for a, b in zip(lat["off"], lat[m])) * 1e6
+        out[f"{m}_paired_delta_us"] = paired_us
+        out[f"{m}_overhead_pct"] = paired_us / base * 100.0
+
+    # ---- part 2: hedged call reassembled via dbg.trace -----------------
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    trace.configure(enabled=True, sample=1.0)
+    trace.clear()
+    try:
+        with Engine("tcp://127.0.0.1:0") as reg_eng:
+            registry = RegistryService(reg_eng, instance_ttl=10.0)
+            with ExitStack() as stack:
+                stack.callback(registry.close)
+                worker_uris = []
+                for _ in range(2):
+                    p = subprocess.Popen(
+                        [sys.executable, "-c", _POOL_WORKER_SRC, src,
+                         "tcp://127.0.0.1:0", reg_eng.uri, str(work_ms)],
+                        stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+                        text=True)
+
+                    def _stop(proc=p):
+                        try:
+                            proc.stdin.close()
+                            proc.wait(timeout=10)
+                        except Exception:
+                            proc.kill()
+                    stack.callback(_stop)
+                    line = p.stdout.readline().strip()
+                    if not line.startswith("URI "):
+                        raise RuntimeError(f"trace worker failed: {line!r}")
+                    worker_uris.append(line[4:])
+
+                with Engine("tcp://127.0.0.1:0") as cli:
+                    # hedge long before the 30ms service time completes:
+                    # every call contacts BOTH replicas, the loser is
+                    # canceled at the transport
+                    pool = ServicePool(
+                        cli, reg_eng.uri, "bench-pool", balancer="rr",
+                        policy=RetryPolicy(attempts=3, rpc_timeout=10.0,
+                                           hedge_after=0.005))
+                    pool.call("work", b"y", timeout=10)      # warm
+                    time.sleep(0.2)
+                    trace.clear()
+                    pool.call("work", b"y", timeout=10)
+                    time.sleep(0.3)            # hedge loser settles
+
+                    local = trace.export()["spans"]
+                    root = next(s for s in local
+                                if s["name"].startswith("pool."))
+                    spans = [s for s in local
+                             if s["trace"] == root["trace"]]
+                    for u in worker_uris:
+                        spans += cli.call(u, "dbg.trace",
+                                          {"trace_id": root["trace"]},
+                                          timeout=10)["spans"]
+                    roots, _ = trace.build_tree(spans)
+                    attempts = [s for s in spans
+                                if s["name"].startswith("attempt.")]
+                    out["reassembly"] = {
+                        "span_count": len(spans),
+                        "processes": len({s["pid"] for s in spans}),
+                        "roots": len(roots),
+                        "attempts": len(attempts),
+                        "canceled": sum(1 for s in attempts
+                                        if s["status"] == "CANCELED"),
+                    }
+    finally:
+        trace.configure(sample=prev_sample, enabled=prev_enabled)
+        trace.clear()
+
+    rs = out["reassembly"]
+    assert out["unsampled_overhead_pct"] <= 5.0, \
+        (f"unsampled tracing adds {out['unsampled_paired_delta_us']:.1f}us "
+         f"({out['unsampled_overhead_pct']:.1f}%) to the "
+         f"{out['off_rtt_us']:.0f}us routed-pool RTT; budget is 5%")
+    assert rs["roots"] == 1, \
+        f"span tree is disconnected ({rs['roots']} roots)"
+    assert rs["processes"] >= 3, \
+        (f"trace only spans {rs['processes']} processes; expected client "
+         f"+ 2 workers")
+    assert rs["attempts"] >= 2 and rs["canceled"] >= 1, \
+        (f"hedge not visible in trace: {rs['attempts']} attempts, "
+         f"{rs['canceled']} canceled")
+    return out
+
+
 def run_all(verbose=True, transports=("self", "sm", "tcp"),
             smoke=False, only=None) -> List[Dict]:
     unknown = [t for t in transports if t not in ("self", "sm", "tcp")]
@@ -1008,7 +1175,8 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
         raise SystemExit(f"unknown transport(s) {unknown}; "
                          f"choose from self, sm, tcp")
     known_benches = ("latency", "bandwidth", "rate", "pool", "overload",
-                     "registry_failover", "gossip_churn", "cached_resolve")
+                     "registry_failover", "gossip_churn", "cached_resolve",
+                     "trace_overhead")
     if only:
         bad = [b for b in only if b not in known_benches]
         if bad:
@@ -1021,7 +1189,8 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
         # are opt-in
         return (name in only if only
                 else name not in ("overload", "registry_failover",
-                                  "gossip_churn", "cached_resolve"))
+                                  "gossip_churn", "cached_resolve",
+                                  "trace_overhead"))
 
     iters = 50 if smoke else 200
     sizes = (4 << 10, 1 << 20) if smoke else \
@@ -1049,6 +1218,9 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
     if want("cached_resolve"):
         results.append(bench_cached_resolve(
             n_reads=100 if smoke else 250))
+    if want("trace_overhead"):
+        results.append(bench_trace_overhead(
+            n_calls=150 if smoke else 450))
     if verbose:
         lat = next((r for r in results if r["name"] == "rpc_latency"), None)
         if lat is not None:
@@ -1129,6 +1301,21 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                       f"registry round-trips | stale reads "
                       f"{res['stale_reads']} across epoch bump, foreign "
                       f"write, and registry restart")
+            if res["name"] == "trace_overhead":
+                print(f"[trace_overhead] routed-pool RTT over "
+                      f"{res['calls_per_mode']} calls/mode "
+                      f"(per-call interleaved):")
+                print(f"   off {res['off_rtt_us']:.0f}us | unsampled "
+                      f"{res['unsampled_paired_delta_us']:+.1f}us "
+                      f"({res['unsampled_overhead_pct']:+.1f}%) | sampled "
+                      f"{res['sampled_paired_delta_us']:+.1f}us "
+                      f"({res['sampled_overhead_pct']:+.1f}%)  "
+                      f"[paired medians]")
+                rs = res["reassembly"]
+                print(f"   hedged call reassembled via dbg.trace: "
+                      f"{rs['span_count']} spans, {rs['processes']} "
+                      f"processes, {rs['roots']} root, {rs['attempts']} "
+                      f"attempts ({rs['canceled']} canceled)")
             if res["name"] == "routed_pool_overload":
                 print(f"[overload] {res['workers']}x{res['worker_threads']}"
                       f" handlers @ {res['work_ms']:.0f}ms, "
@@ -1159,7 +1346,8 @@ if __name__ == "__main__":
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                          "latency,bandwidth,rate,pool,overload,"
-                         "registry_failover,gossip_churn,cached_resolve")
+                         "registry_failover,gossip_churn,cached_resolve,"
+                         "trace_overhead")
     args = ap.parse_args()
     res = run_all(transports=tuple(args.transports.split(",")),
                   smoke=args.smoke,

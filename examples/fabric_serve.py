@@ -23,6 +23,14 @@ view); after the lease expires the next-ranked replica takes over and
 the pool resyncs onto its fresh epoch stream — the control plane is no
 longer a single point of failure (DESIGN.md §8).
 
+**Act four — the trace of a kill**: tracing is cranked to 100% and
+*another* gateway is killed.  A generate call that retries across the
+corpse leaves a distributed span tree — pool root, one attempt span per
+try (the dead hop closed with its failure, the survivor ``OK``), the
+server's serve spans — which is fetched back over ``dbg.trace`` and
+pretty-printed: the flight recorder for every act above (DESIGN.md
+§10).
+
     PYTHONPATH=src python examples/fabric_serve.py
 """
 import concurrent.futures as cf
@@ -42,6 +50,7 @@ from repro.fabric import RegistryService, RetryPolicy, ServicePool
 from repro.models import Model, unzip
 from repro.serve.engine import ServeEngine
 from repro.services import ServingGateway
+from repro.telemetry import trace
 
 N_REPLICAS = 3
 N_REQUESTS = 12
@@ -261,6 +270,52 @@ def main():
               f"control-plane kill ({fails} failures)")
         assert fails == 0, "registry failover must be client-invisible"
         assert len(pool.replicas()) == N_REPLICAS - 1   # view survived
+
+        # ---- act four: the trace of a kill -------------------------------
+        # 100% sampling, then kill another gateway without deregistering:
+        # until the TTL sweep evicts it, the pool still routes to the
+        # corpse, fails fast, and retries — and with tracing on, that
+        # whole story is a span tree any engine will hand back over
+        # dbg.trace.  No collector, no sidecar: the rings are the store.
+        trace.configure(sample=1.0, enabled=True)
+        eng4, gw4 = replicas.pop(0)
+        gw4.instance.close(deregister=False)
+        gw4.stop()
+        eng4.shutdown()
+        print("[chaos] killed another gateway, tracing at 100%")
+        picked = None
+        for _ in range(24):            # catch a call that had to retry
+            trace.clear()
+            out = pool.call("gen.generate",
+                            {"tokens": rng.integers(1, cfg.vocab,
+                                                    size=4).tolist(),
+                             "max_new": MAX_NEW}, timeout=60.0)
+            assert out["done"]
+            ring = trace.export()["spans"]
+            picked = next((s for s in ring
+                           if s["name"].startswith("pool.gen.")
+                           and s["parent"] is None), picked)
+            if picked and picked["tags"].get("attempts", 1) >= 2:
+                break
+        assert picked is not None
+        tid = picked["trace"]
+
+        # reassemble: our own ring plus dbg.trace from every survivor —
+        # in this demo all engines share one process (one ring), but the
+        # fetch path is the same RPC a real debugger uses fleet-wide
+        spans = {s["span"]: s for s in trace.spans_for(tid)}
+        for r_eng, _gw in replicas:
+            got = client.call(r_eng.uri, "dbg.trace", {"trace_id": tid},
+                              timeout=10.0)
+            for s in got["spans"]:
+                spans.setdefault(s["span"], s)
+        roots, _kids = trace.build_tree(list(spans.values()))
+        n_att = picked["tags"].get("attempts", 1)
+        print(f"[trace] generate call {tid[:8]}… — {len(spans)} spans, "
+              f"{n_att} attempt(s), one connected tree:")
+        for line in trace.format_tree(list(spans.values())).splitlines():
+            print(f"   {line}")
+        assert len(roots) == 1, "a hop dropped trace context"
 
     for eng, gw in replicas:
         gw.stop()

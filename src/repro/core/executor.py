@@ -16,6 +16,7 @@ model". Both are built here *on top of* the unchanged core:
 from __future__ import annotations
 
 import concurrent.futures as cf
+import os
 import threading
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
@@ -30,6 +31,12 @@ from .na.base import NAAddress, NAPlugin
 from .progress import Context
 from .rpc import Handle, HGClass
 from .types import CallbackInfo, MercuryError, OpType, Ret
+from ..telemetry import metrics as _metrics
+from ..telemetry import trace as _trace
+
+_M_CALLS = _metrics.counter("core.engine.calls")
+_M_HANDLED = _metrics.counter("core.engine.handled")
+_M_NOTIFIES = _metrics.counter("core.engine.notifies")
 
 
 class RemoteError(MercuryError):
@@ -88,7 +95,24 @@ class Engine:
                                         name=f"hg-progress[{self.uri}]")
         if listen:
             self.hg.listen()
+            self._register_telemetry_rpcs()
         self._thread.start()
+
+    def _register_telemetry_rpcs(self) -> None:
+        """Every listening engine serves the telemetry plane uniformly:
+        ``dbg.trace`` (span ring snapshot — clients reassemble the
+        cross-process span tree by unioning these) and ``fab.metrics``
+        (the process-global metrics registry)."""
+        self.register(
+            "dbg.trace",
+            lambda req: _trace.export(trace_id=(req or {}).get("trace_id"),
+                                      limit=(req or {}).get("limit")),
+            inline=True)
+        self.register(
+            "fab.metrics",
+            lambda _req: {"pid": os.getpid(), "uri": self.uri,
+                          "metrics": _metrics.snapshot()},
+            inline=True)
 
     # ------------------------------------------------------------------ runtime
     @property
@@ -134,10 +158,26 @@ class Engine:
         the handler hops to the thread pool (safe for blocking work);
         ``inline=True`` executes it directly on the progress thread — the
         low-latency path for cheap, non-blocking handlers (the handler
-        MUST NOT block or issue nested blocking RPCs)."""
+        MUST NOT block or issue nested blocking RPCs).
+
+        Every handler execution is a *server span* of the wire-propagated
+        trace (no-op unless the request carried a sampled context), and
+        the request's context is installed as the thread's ambient context
+        for the handler's duration — nested calls (service chains, the
+        registry's write-proxy hop) inherit it automatically."""
 
         def handler(handle: Handle) -> None:
             def work():
+                _M_HANDLED.inc()
+                span = _trace.start_span(f"rpc.{name}", handle.trace_ctx)
+                if span.recorded:
+                    span.annotate(
+                        engine=self.uri, budget_ms=handle.budget_ms,
+                        queue_ms=round(
+                            (time.monotonic() - handle.arrived) * 1e3, 3),
+                        local=handle._local_deliver is not None)
+                tok = _trace.activate(span.ctx)
+                status = "OK"
                 try:
                     value = handle.get_input()
                     if pass_handle:
@@ -149,11 +189,16 @@ class Engine:
                     if not no_response:
                         handle.respond(out)
                 except MercuryError as e:
+                    status = e.ret.name
                     if not no_response and not handle.responded:
                         handle.respond(str(e), ret=e.ret)
                 except Exception as e:
+                    status = "FAULT"
                     if not no_response and not handle.responded:
                         handle.respond(f"{type(e).__name__}: {e}", ret=Ret.FAULT)
+                finally:
+                    _trace.restore(tok)
+                    span.finish(status)
             if inline:
                 work()
             else:
@@ -186,6 +231,7 @@ class Engine:
         The returned :class:`CallFuture` supports ``cancel_call()``.
         """
         fut = CallFuture()
+        _M_CALLS.inc()
         if deadline is not None:
             timeout = deadline - time.monotonic()
             if timeout <= 0:
@@ -225,6 +271,7 @@ class Engine:
 
     def notify(self, target: str | NAAddress, name: str, arg: Any = None) -> None:
         """Fire-and-forget RPC (NO_RESPONSE flag)."""
+        _M_NOTIFIES.inc()
         if not self.hg.is_registered(name):
             self.hg.register(name, no_response=True)
         addr = self.lookup(target) if isinstance(target, str) else target

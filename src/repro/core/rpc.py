@@ -31,8 +31,10 @@ from .bulk import BulkDescriptor, BulkHandle, BulkOpType, bulk_transfer
 from .na.base import NAAddress, NAPlugin, UNEXPECTED_MSG_LIMIT
 from .progress import Context
 from .types import (Callback, CallbackInfo, Flags, MercuryError, OpType,
-                    REQUEST_HEADER_SIZE, RequestHeader, ResponseHeader, Ret,
-                    _Counter, payload_crc32, stable_rpc_id)
+                    PROTOCOL_VERSION, REQUEST_HEADER_SIZE,
+                    RESPONSE_HEADER_SIZE, RequestHeader, ResponseHeader, Ret,
+                    ZERO_TRACE_ID, _Counter, payload_crc32, stable_rpc_id)
+from ..telemetry import trace as _trace
 
 
 # Serialization-free self-tier dispatch (DESIGN.md §9): every listening
@@ -107,6 +109,11 @@ class Handle:
         # remaining_budget()
         self.budget_ms: int = 0
         self.arrived: float = 0.0
+        # target side: wire-propagated trace context (v5 header) and the
+        # peer's protocol version (echoed in the response header so v4
+        # peers keep decoding us)
+        self.trace_ctx: Optional[_trace.TraceContext] = None
+        self.peer_version: int = PROTOCOL_VERSION
 
     def _release_payload(self) -> None:
         if self._payload_bulk is not None:
@@ -147,6 +154,13 @@ class Handle:
             crc = payload_crc32(payload)
         if self.rpc.no_response:
             flags |= Flags.NO_RESPONSE
+        # ambient trace context rides the v5 header (one TLS read when
+        # untraced — the near-zero unsampled path)
+        tctx = _trace.current()
+        if tctx is not None:
+            t_id, s_id, t_fl = tctx.trace_id, tctx.span_id, tctx.flags
+        else:
+            t_id, s_id, t_fl = ZERO_TRACE_ID, 0, 0
         limit = getattr(hg.na, "max_unexpected_size", UNEXPECTED_MSG_LIMIT)
         if REQUEST_HEADER_SIZE + len(payload) > limit:
             # Rendezvous: the unexpected message carries only a bulk
@@ -171,11 +185,13 @@ class Handle:
             self._payload_bulk = BulkHandle(hg.na, [reg_buf],
                                             read=True, write=False)
             hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
-                                len(payload), crc, budget_ms)
+                                len(payload), crc, budget_ms,
+                                t_id, s_id, t_fl)
             msg = (hdr.pack(), self._payload_bulk.descriptor().to_bytes())
         else:
             hdr = RequestHeader(self.rpc.rpc_id, self.cookie, flags,
-                                len(payload), crc, budget_ms)
+                                len(payload), crc, budget_ms,
+                                t_id, s_id, t_fl)
             msg = (hdr.pack(), payload)   # vectored: no payload copy
 
         def complete(ret: Ret, output: Any = None):
@@ -200,7 +216,7 @@ class Handle:
                     return
                 try:
                     rhdr = ResponseHeader.unpack(data)
-                    body = data[len(ResponseHeader(0).pack()):]
+                    body = data[RESPONSE_HEADER_SIZE:]
                     if rhdr.payload_len and Flags.CHECKSUM and hg.checksum_payloads:
                         if rhdr.payload_crc and payload_crc32(body) != rhdr.payload_crc:
                             complete(Ret.CHECKSUM_ERROR)
@@ -301,6 +317,9 @@ class Handle:
         th.cookie = self.cookie
         th.budget_ms = budget_ms
         th.arrived = time.monotonic()
+        # self-tier: the trace context object is handed across directly —
+        # no serialization, matching the value fast path it instruments
+        th.trace_ctx = _trace.current()
         th._input = _copy.deepcopy(input_value) if copy else input_value
         th._input_decoded = True
 
@@ -392,7 +411,8 @@ class Handle:
             payload = hg_proc.encode(hg_proc.proc_str, str(output)) \
                 if output is not None else b""
         crc = payload_crc32(payload) if hg.checksum_payloads and payload else 0
-        hdr = ResponseHeader(self.cookie, ret, len(payload), crc)
+        hdr = ResponseHeader(self.cookie, ret, len(payload), crc,
+                             version=self.peer_version)
 
         ctx = self.info.context
 
@@ -494,12 +514,15 @@ class HGClass:
             hdr = RequestHeader.unpack(data)
         except MercuryError:
             return
-        body = data[REQUEST_HEADER_SIZE:]
+        # v4 peers send the shorter legacy header: slice the body at the
+        # *decoded* header size, never at the v5 constant
+        body = data[hdr.wire_size:]
         info = self.registered.get(hdr.rpc_id)
 
         if info is None:
             if not (hdr.flags & Flags.NO_RESPONSE):
-                rhdr = ResponseHeader(hdr.cookie, Ret.NOENTRY, 0, 0)
+                rhdr = ResponseHeader(hdr.cookie, Ret.NOENTRY, 0, 0,
+                                      version=hdr.version)
                 self.na.msg_send_expected(source, rhdr.pack(), hdr.cookie,
                                           lambda r: None)
             return
@@ -517,7 +540,8 @@ class HGClass:
 
         def fail(ret: Ret) -> None:
             if not (hdr.flags & Flags.NO_RESPONSE):
-                rhdr = ResponseHeader(hdr.cookie, ret, 0, 0)
+                rhdr = ResponseHeader(hdr.cookie, ret, 0, 0,
+                                      version=hdr.version)
                 self.na.msg_send_expected(source, rhdr.pack(), hdr.cookie,
                                           lambda r: None)
 
@@ -561,6 +585,10 @@ class HGClass:
         handle._input_raw = body
         handle.budget_ms = hdr.budget_ms
         handle.arrived = time.monotonic()
+        handle.peer_version = hdr.version
+        if hdr.span_id:
+            handle.trace_ctx = _trace.TraceContext(
+                hdr.trace_id, hdr.span_id, hdr.trace_flags)
 
         if (hdr.flags & Flags.CHECKSUM) and self.checksum_payloads and hdr.payload_len:
             if payload_crc32(body) != hdr.payload_crc:

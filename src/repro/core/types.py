@@ -13,8 +13,10 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-PROTOCOL_VERSION = 4
+PROTOCOL_VERSION = 5
+MIN_PROTOCOL_VERSION = 4   # oldest peer version we still decode
 HEADER_MAGIC = 0x4D4A5250  # "MJRP"
+ZERO_TRACE_ID = b"\x00" * 16
 
 
 class Ret(enum.IntEnum):
@@ -63,15 +65,24 @@ class ChecksumError(MercuryError):
 # --------------------------------------------------------------------------
 # Wire headers
 # --------------------------------------------------------------------------
-# Request: magic u32 | version u8 | flags u8 | pad u16 | rpc_id u64
-#          | cookie u64 | payload_len u32 | payload_crc u32
+# Request v5 (64 B): magic u32 | version u8 | flags u8 | pad u16
+#          | rpc_id u64 | cookie u64 | payload_len u32 | payload_crc u32
 #          | budget_ms u32 (remaining deadline budget; 0 = unbounded)
-_REQ = struct.Struct("<IBBHQQIII")
+#          | trace_id 16B | span_id u64 | trace_flags u8 | pad 3B
+_REQ = struct.Struct("<IBBHQQIII16sQB3x")
+# Request v4 (36 B): same prefix, no trace fields.  Still decoded for
+# back-compat; a v4 peer's requests must keep working mid-upgrade.
+_REQ_V4 = struct.Struct("<IBBHQQIII")
 # Response: magic u32 | version u8 | ret u8 | pad u16 | cookie u64
 #           | payload_len u32 | payload_crc u32
+# Byte-identical across v4/v5 (responses carry no trace context: spans
+# are collected server-side via dbg.trace) — only the version byte
+# differs, and a target echoes the requester's version so a v4 peer's
+# responses neither grow nor get rejected.
 _RSP = struct.Struct("<IBBHQII")
 
 REQUEST_HEADER_SIZE = _REQ.size
+REQUEST_HEADER_SIZE_V4 = _REQ_V4.size
 RESPONSE_HEADER_SIZE = _RSP.size
 
 
@@ -93,24 +104,57 @@ class RequestHeader:
     # no deadline.  Targets use it for admission control (shed with
     # Ret.OVERLOAD when the estimated queue wait already exceeds it).
     budget_ms: int = 0
+    # trace context (v5, DESIGN.md §10): zeroed = untraced request.  A v4
+    # peer's header decodes with these left at their zero defaults.
+    trace_id: bytes = ZERO_TRACE_ID
+    span_id: int = 0
+    trace_flags: int = 0
+    # decoded wire version (v4 headers are shorter; targets echo this in
+    # the response so old peers keep decoding us)
+    version: int = PROTOCOL_VERSION
+
+    @property
+    def wire_size(self) -> int:
+        """Actual on-wire size of this header (version-dependent) — the
+        dispatcher slices the body at this offset, never at the constant."""
+        return REQUEST_HEADER_SIZE_V4 if self.version == 4 \
+            else REQUEST_HEADER_SIZE
 
     def pack(self) -> bytes:
+        if self.version == 4:
+            # legacy layout: trace fields dropped (tests and mixed-version
+            # rings craft these; this process always sends v5)
+            return _REQ_V4.pack(
+                HEADER_MAGIC, 4, int(self.flags), 0,
+                self.rpc_id, self.cookie, self.payload_len,
+                self.payload_crc, self.budget_ms,
+            )
         return _REQ.pack(
             HEADER_MAGIC, PROTOCOL_VERSION, int(self.flags), 0,
             self.rpc_id, self.cookie, self.payload_len, self.payload_crc,
-            self.budget_ms,
+            self.budget_ms, self.trace_id, self.span_id, self.trace_flags,
         )
 
     @staticmethod
     def unpack(buf: bytes | memoryview) -> "RequestHeader":
-        (magic, ver, flags, _pad, rpc_id, cookie, plen, crc,
-         budget_ms) = _REQ.unpack_from(buf)
+        magic, ver = struct.unpack_from("<IB", buf)
         if magic != HEADER_MAGIC:
             raise MercuryError(Ret.PROTOCOL_ERROR, f"bad magic {magic:#x}")
-        if ver != PROTOCOL_VERSION:
-            raise MercuryError(Ret.PROTOCOL_ERROR, f"version {ver} != {PROTOCOL_VERSION}")
-        return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc,
-                             budget_ms)
+        if ver == PROTOCOL_VERSION:
+            (_magic, _ver, flags, _pad, rpc_id, cookie, plen, crc, budget_ms,
+             trace_id, span_id, trace_flags) = _REQ.unpack_from(buf)
+            return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc,
+                                 budget_ms, bytes(trace_id), span_id,
+                                 trace_flags, PROTOCOL_VERSION)
+        if ver == 4:
+            (_magic, _ver, flags, _pad, rpc_id, cookie, plen, crc,
+             budget_ms) = _REQ_V4.unpack_from(buf)
+            return RequestHeader(rpc_id, cookie, Flags(flags), plen, crc,
+                                 budget_ms, version=4)
+        raise MercuryError(
+            Ret.PROTOCOL_ERROR,
+            f"version {ver} unsupported (accept "
+            f"{MIN_PROTOCOL_VERSION}..{PROTOCOL_VERSION})")
 
 
 @dataclass(frozen=True)
@@ -119,10 +163,13 @@ class ResponseHeader:
     ret: Ret = Ret.SUCCESS
     payload_len: int = 0
     payload_crc: int = 0
+    # targets echo the requester's version; the layout is identical either
+    # way, so v4 peers see responses of the exact size they expect
+    version: int = PROTOCOL_VERSION
 
     def pack(self) -> bytes:
         return _RSP.pack(
-            HEADER_MAGIC, PROTOCOL_VERSION, int(self.ret), 0,
+            HEADER_MAGIC, self.version, int(self.ret), 0,
             self.cookie, self.payload_len, self.payload_crc,
         )
 
@@ -131,9 +178,12 @@ class ResponseHeader:
         magic, ver, ret, _pad, cookie, plen, crc = _RSP.unpack_from(buf)
         if magic != HEADER_MAGIC:
             raise MercuryError(Ret.PROTOCOL_ERROR, f"bad magic {magic:#x}")
-        if ver != PROTOCOL_VERSION:
-            raise MercuryError(Ret.PROTOCOL_ERROR, f"version {ver} != {PROTOCOL_VERSION}")
-        return ResponseHeader(cookie, Ret(ret), plen, crc)
+        if not (MIN_PROTOCOL_VERSION <= ver <= PROTOCOL_VERSION):
+            raise MercuryError(
+                Ret.PROTOCOL_ERROR,
+                f"version {ver} unsupported (accept "
+                f"{MIN_PROTOCOL_VERSION}..{PROTOCOL_VERSION})")
+        return ResponseHeader(cookie, Ret(ret), plen, crc, ver)
 
 
 def payload_crc32(data: bytes | memoryview) -> int:

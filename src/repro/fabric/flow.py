@@ -40,6 +40,18 @@ import threading
 import time
 from typing import Dict, Optional
 
+from ..telemetry import metrics as _metrics
+
+# unified metrics: process-wide totals across every gate instance (the
+# per-gate view stays in stats(); fab.metrics exports these).  Gates are
+# per-replica and ephemeral, so per-instance label cardinality would be
+# unbounded — totals are the stable export.
+_M_ACQUIRED = _metrics.counter("fabric.gate.acquired")
+_M_BACKPRESSURED = _metrics.counter("fabric.gate.backpressured")
+_M_REJECTED = _metrics.counter("fabric.gate.rejected")
+_M_GROWN = _metrics.counter("fabric.gate.grown")
+_M_SHRUNK = _metrics.counter("fabric.gate.shrunk")
+
 
 class CreditGate:
     """A counting gate with wait-with-timeout and observable occupancy
@@ -74,6 +86,7 @@ class CreditGate:
                 return False
             self._inflight += 1
             self.acquired_total += 1
+            _M_ACQUIRED.inc()
             return True
 
     def acquire(self, timeout: float) -> bool:
@@ -82,6 +95,7 @@ class CreditGate:
         with self._cv:
             if self._inflight >= int(self._limit):
                 self.backpressured_total += 1
+                _M_BACKPRESSURED.inc()
                 deadline = time.monotonic() + timeout
                 self._waiting += 1
                 try:
@@ -91,11 +105,13 @@ class CreditGate:
                             if self._inflight < int(self._limit):
                                 break
                             self.rejected_total += 1
+                            _M_REJECTED.inc()
                             return False
                 finally:
                     self._waiting -= 1
             self._inflight += 1
             self.acquired_total += 1
+            _M_ACQUIRED.inc()
             return True
 
     def release(self) -> None:
@@ -199,6 +215,7 @@ class AdaptiveCreditGate(CreditGate):
                                   float(self.max_credits))
                 if int(self._limit) > before:
                     self.grown_total += 1
+                    _M_GROWN.inc()
                     self._cv.notify_all()    # waiters may fit now
             else:
                 self._shrink_locked(now)
@@ -221,6 +238,7 @@ class AdaptiveCreditGate(CreditGate):
         self._last_shrink = now
         if int(self._limit) < before:
             self.shrunk_total += 1
+            _M_SHRUNK.inc()
 
     def stats(self) -> Dict[str, int]:
         out = super().stats()

@@ -25,6 +25,14 @@ from dataclasses import dataclass, replace
 from typing import Any, Callable, Optional
 
 from ..core.types import MercuryError, Ret
+from ..telemetry import metrics as _metrics
+
+# unified metrics: budget-loop outcomes across every pool/caller (the
+# loop itself stays pure — counters are clock-free)
+_M_RETRIES = _metrics.counter("fabric.retry.retries")
+_M_FAST_FAILOVERS = _metrics.counter("fabric.retry.fast_failovers")
+_M_DEADLINE_EXCEEDED = _metrics.counter("fabric.retry.deadline_exceeded")
+_M_BUDGET_EXHAUSTED = _metrics.counter("fabric.retry.budget_exhausted")
 
 
 class FabricError(MercuryError):
@@ -110,6 +118,7 @@ def call_with_budget(policy: RetryPolicy, deadline: float,
         now = clock()
         timeout = policy.attempt_timeout(now, deadline)
         if timeout <= 0:
+            _M_DEADLINE_EXCEEDED.inc()
             raise DeadlineExceeded(
                 f"deadline expired before attempt {attempt + 1}", last)
         try:
@@ -120,11 +129,14 @@ def call_with_budget(policy: RetryPolicy, deadline: float,
             last = e
         if attempt + 1 >= policy.attempts:
             break
+        _M_RETRIES.inc()
         if getattr(last, "ret", None) in policy.fast_rets:
+            _M_FAST_FAILOVERS.inc()
             continue                  # fast failover: re-rank immediately
         pause = min(policy.backoff(attempt + 1, rand()),
                     max(deadline - clock(), 0.0))
         if pause > 0:
             sleep(pause)
+    _M_BUDGET_EXHAUSTED.inc()
     raise BudgetExhausted(
         f"all {policy.attempts} attempts failed: {last}", last)

@@ -59,6 +59,8 @@ from ..core.executor import CallFuture, Engine, RemoteError
 from ..core.na.base import SCHEME_TIERS
 from ..core.na.multi import scheme_of as _scheme
 from ..core.types import MercuryError, Ret
+from ..telemetry import metrics as _metrics
+from ..telemetry import trace as _trace
 from .balancer import Balancer, make_balancer
 from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, NonRetryable,
@@ -79,6 +81,22 @@ _TIER_FAULTS = {Ret.DISCONNECT, Ret.PROTOCOL_ERROR}
 # failures that are congestion signals for the adaptive credit gate: the
 # replica (not the transport tier, not the application) is struggling
 _CONGESTION = {Ret.TIMEOUT, Ret.AGAIN, Ret.OVERLOAD, Ret.DISCONNECT}
+
+# unified metrics (docs/OPERATIONS.md §7): process-wide totals across
+# every pool in this process, exported via fab.metrics
+_M_CALLS = _metrics.counter("fabric.pool.calls")
+_M_CALL_ERRORS = _metrics.counter("fabric.pool.call_errors")
+_M_ATTEMPTS = _metrics.counter("fabric.pool.attempts")
+_M_HEDGES = _metrics.counter("fabric.pool.hedges")
+_M_CALL_MS = _metrics.histogram("fabric.pool.call_ms")
+
+
+def _status_of(err: Optional[BaseException]) -> str:
+    """Span status string for an attempt/call outcome."""
+    if err is None:
+        return "OK"
+    ret = getattr(err, "ret", None)
+    return ret.name if ret is not None else type(err).__name__
 
 
 class PoolError(MercuryError):
@@ -365,7 +383,15 @@ class ServicePool:
         if deadline is None:
             deadline = time.monotonic() + (timeout if timeout is not None
                                            else self.default_timeout)
-        state = {"issued": 0, "failed_iids": set(), "winner": None}
+        # one logical call = one trace: root a new one here (head-sampled)
+        # unless the caller is already inside a traced request, in which
+        # case the pool call is a child span of it
+        parent = _trace.current()
+        root = (_trace.start_span(f"pool.{self.service}.{rpc}", parent)
+                if parent is not None
+                else _trace.start_trace(f"pool.{self.service}.{rpc}"))
+        state = {"issued": 0, "failed_iids": set(), "winner": None,
+                 "tctx": root.ctx}
 
         def attempt(idx: int, attempt_timeout: float) -> Any:
             if state["issued"] >= policy.attempts:
@@ -380,7 +406,17 @@ class ServicePool:
             return self._attempt_once(rpc, arg, attempt_timeout, policy,
                                       state, deadline, only_iid)
 
-        return call_with_budget(policy, deadline, attempt), state["winner"]
+        t0 = time.monotonic()
+        _M_CALLS.inc()
+        try:
+            result = call_with_budget(policy, deadline, attempt)
+        except BaseException as e:
+            _M_CALL_ERRORS.inc()
+            root.finish(_status_of(e), attempts=state["issued"])
+            raise
+        _M_CALL_MS.observe((time.monotonic() - t0) * 1e3)
+        root.finish("OK", attempts=state["issued"], winner=state["winner"])
+        return result, state["winner"]
 
     def _candidates(self, failed: set,
                     only_iid: Optional[str] = None) -> List[Replica]:
@@ -411,13 +447,15 @@ class ServicePool:
                             + (f" (pinned to {only_iid})" if only_iid
                                else ""))
 
+        t_adm = time.monotonic()
         primary = self._admit(candidates, attempt_deadline)
+        admit_ms = (time.monotonic() - t_adm) * 1e3
         futs: List[CallFuture] = []
         owners: List[Replica] = []
         try:
             try:
                 futs.append(self._issue(primary, rpc, arg, attempt_deadline,
-                                        state))
+                                        state, admit_ms=admit_ms))
             except MercuryError as e:
                 # sync failure (e.g. un-encodable arg -> INVALID_ARG) gets
                 # the same retryable/non-retryable classification as
@@ -449,15 +487,33 @@ class ServicePool:
         return best
 
     def _issue(self, rep: Replica, rpc: str, arg: Any,
-               attempt_deadline: float, state: dict) -> CallFuture:
+               attempt_deadline: float, state: dict,
+               admit_ms: float = 0.0, hedge: bool = False) -> CallFuture:
         """One wire RPC to one replica (credit already held); the credit
-        is returned when the future settles, whatever settles it."""
+        is returned when the future settles, whatever settles it.
+
+        Each issue is a child span of the call's trace, tagged with the
+        replica it targeted, its credit-gate admission wait, and — when
+        the future settles — its outcome (a hedge loser closes
+        ``CANCELED``).  The span context is ambient around
+        ``call_async`` so it rides the wire and the replica's server
+        span becomes its child."""
         state["issued"] += 1
+        _M_ATTEMPTS.inc()
+        if hedge:
+            _M_HEDGES.inc()
+        span = _trace.start_span(f"attempt.{rpc}", state.get("tctx"))
+        if span.recorded:
+            span.annotate(iid=rep.iid, uri=rep.resolved_uri or "?",
+                          n=state["issued"], hedge=hedge,
+                          admit_ms=round(admit_ms, 3))
         try:
-            fut = self.engine.call_async(rep.addr, rpc, arg,
-                                         deadline=attempt_deadline)
-        except BaseException:
+            with _trace.use(span.ctx):
+                fut = self.engine.call_async(rep.addr, rpc, arg,
+                                             deadline=attempt_deadline)
+        except BaseException as e:
             rep.gate.release()        # sync failure (e.g. MSGSIZE)
+            span.finish(_status_of(e))
             raise
         # latency samples must start at ISSUE time: measuring from the
         # attempt start would fold our own credit-gate wait (and the
@@ -465,7 +521,12 @@ class ServicePool:
         # would misread its own backpressure as server congestion — a
         # positive-feedback collapse of the limit
         fut.issued_at = time.monotonic()
-        fut.add_done_callback(lambda _f: rep.gate.release())
+
+        def _settled(f: CallFuture) -> None:
+            rep.gate.release()
+            span.finish(_status_of(f.exception()))
+
+        fut.add_done_callback(_settled)
         return fut
 
     def _await(self, futs: List[CallFuture], owners: List[Replica],
@@ -514,7 +575,8 @@ class ServicePool:
                 hedge_rep = self._hedge_candidate(candidates, owners)
                 if hedge_rep is not None:
                     futs.append(self._issue(hedge_rep, rpc, arg,
-                                            attempt_deadline, state))
+                                            attempt_deadline, state,
+                                            hedge=True))
                     owners.append(hedge_rep)
                     pending.append(futs[-1])
             if not pending:

@@ -36,9 +36,16 @@ from hashlib import blake2b
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from ..core import proc as hg_proc
+from ..telemetry import metrics as _metrics
 
 # (nonce, epoch) pair identifying one point in one authoritative stream
 Token = Tuple[Optional[str], int]
+
+# unified metrics: process-wide totals across every cache instance
+# (per-instance detail stays in stats(); fab.metrics exports these)
+_M_HITS = _metrics.counter("fabric.readcache.hits")
+_M_MISSES = _metrics.counter("fabric.readcache.misses")
+_M_EVICTIONS = _metrics.counter("fabric.readcache.evictions")
 
 
 def args_digest(method: str, args: Any) -> bytes:
@@ -83,6 +90,7 @@ class ReadCache:
             self._token = (nonce, epoch)
             if self._entries:
                 self._evictions += len(self._entries)
+                _M_EVICTIONS.inc(len(self._entries))
                 self._entries.clear()
             return True
 
@@ -98,6 +106,7 @@ class ReadCache:
         that just wrote through a path whose new epoch it cannot see)."""
         with self._lock:
             self._evictions += len(self._entries)
+            _M_EVICTIONS.inc(len(self._entries))
             self._entries.clear()
 
     # -- lookup --------------------------------------------------------------
@@ -124,9 +133,11 @@ class ReadCache:
                         token, expires, value = ent
                         if token == self._token and time.monotonic() < expires:
                             self._hits += 1
+                            _M_HITS.inc()
                             return value
                         self._entries.pop(key, None)
                         self._evictions += 1
+                        _M_EVICTIONS.inc()
                 fut = self._inflight.get(key)
                 if fut is None:
                     fut = Future()
@@ -159,9 +170,11 @@ class ReadCache:
                     if len(self._entries) >= self.max_entries:
                         self._entries.pop(next(iter(self._entries)))
                         self._evictions += 1
+                        _M_EVICTIONS.inc()
                     self._entries[key] = (token, time.monotonic() + self.ttl,
                                           value)
                 self._misses += 1
+                _M_MISSES.inc()
             fut.set_result(value)
             return value
 

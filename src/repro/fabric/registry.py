@@ -37,7 +37,7 @@ Wire schema (all values plain pytree-of-scalars — see DESIGN.md §7/§8):
   fab.report      {service, iid, load} -> {epoch}          (heartbeat too)
   fab.resolve     {service} -> {epoch, nonce, instances: [{iid, uris,
                                                 capacity, load, age}]}
-  fab.services    {} -> {epoch, services: [name]}
+  fab.services    {} -> {epoch, nonce, services: [name]}
   fab.epoch       {} -> {epoch, nonce, leader}
   fab.status      {} -> {role, leader, nonce, epoch, tables, gossip,
                          peers: [...], ...}
@@ -235,7 +235,10 @@ class RegistryService:
 
     def _services(self, _req):
         with self.core._lock:
-            return {"epoch": self.table.epoch,
+            # carries the full (nonce, epoch) token so the client read
+            # cache holds it authoritatively (evicted on epoch bump or
+            # nonce change), not merely until the TTL lapses
+            return {"epoch": self.table.epoch, "nonce": self.core.nonce,
                     "services": sorted({v["service"]
                                         for _, v in self.table.items()})}
 
@@ -393,7 +396,7 @@ class RegistryClient:
         return self.cache.get_or_call(
             "fab.services", {},
             lambda: self._call("fab.services", {}),
-            fresh=fresh)["services"]
+            fresh=fresh, token_of=self._token_of)["services"]
 
     def epoch(self, fresh: bool = False) -> int:
         return self.epoch_info(fresh=fresh)[0]

@@ -56,6 +56,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core import proc as hg_proc
 from ..core.types import MercuryError, Ret
+from ..telemetry import trace as _trace
 
 # transport-class failures that mean "this control-plane endpoint (or
 # the proxy path behind it) is unreachable/unsettled — try another
@@ -601,15 +602,27 @@ class ReplicationCore:
         if req.get("_proxied"):
             raise MercuryError(Ret.AGAIN,
                                "control-plane leadership unsettled; retry")
+        # child of the ambient server span (the handler that received the
+        # client's write): the trace shows follower hop -> leader hop
+        span = _trace.start_span(f"proxy.{name}", _trace.current(),
+                                 leader=leader)
         try:
-            return self.engine.call(leader, name, dict(req, _proxied=True),
-                                    timeout=self._proxy_timeout)
+            with _trace.use(span.ctx):
+                out = self.engine.call(leader, name,
+                                       dict(req, _proxied=True),
+                                       timeout=self._proxy_timeout)
+            span.finish("OK")
+            return out
         except MercuryError as e:
+            span.finish(e.ret.name)
             if e.ret in FAILOVER_RETS:
                 raise MercuryError(
                     Ret.AGAIN, f"control-plane leader {leader} unreachable "
                     f"({e.ret.name}); retry") from e
             raise                         # application error: handler ran
+        except Exception as e:
+            span.finish(type(e).__name__)
+            raise
 
     def _take_over(self) -> None:
         """Become the leaseholder: start a fresh epoch stream (new nonce

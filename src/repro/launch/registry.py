@@ -32,6 +32,7 @@ import time
 
 from repro.core.executor import Engine
 from repro.fabric import RegistryService
+from repro.telemetry import trace
 
 
 def main(argv=None):
@@ -66,7 +67,16 @@ def main(argv=None):
     ap.add_argument("--full-gossip", action="store_true",
                     help="replicate with full-state snapshot gossip "
                          "instead of per-entry deltas (debug/fallback)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    metavar="P",
+                    help="head-sampling probability for distributed "
+                         "traces rooted here (0..1; default honors "
+                         "REPRO_TRACE_SAMPLE, falling back to 0.01). "
+                         "Sampled spans are served via dbg.trace")
     args = ap.parse_args(argv)
+
+    if args.trace_sample is not None:
+        trace.configure(sample=args.trace_sample)
 
     engine = Engine(args.listen)
     peers = ([p.strip() for p in args.peers.split(",") if p.strip()]

@@ -23,6 +23,7 @@ from repro.core.executor import Engine
 from repro.models import Model, unzip
 from repro.serve.engine import ServeEngine
 from repro.services import ServingGateway
+from repro.telemetry import trace
 
 
 def main(argv=None):
@@ -50,7 +51,16 @@ def main(argv=None):
                          "the instance without waiting for the "
                          "instance TTL (requires the registry to run "
                          "with its membership plane on — the default)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    metavar="P",
+                    help="head-sampling probability for distributed "
+                         "traces rooted here (0..1; default honors "
+                         "REPRO_TRACE_SAMPLE, falling back to 0.01). "
+                         "Sampled spans are served via dbg.trace")
     args = ap.parse_args(argv)
+
+    if args.trace_sample is not None:
+        trace.configure(sample=args.trace_sample)
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     model = Model(cfg)

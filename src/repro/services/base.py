@@ -19,6 +19,14 @@ import jax
 from ..core.executor import Engine, RemoteError
 from ..core.types import MercuryError, Ret
 from ..kernels import ops as kops
+from ..telemetry import metrics as _metrics
+
+# unified metrics: process-wide admission totals + service-time shape
+# (per-controller detail stays in stats(); fab.metrics exports these)
+_M_ADMITTED = _metrics.counter("service.admission.admitted")
+_M_SHED = _metrics.counter("service.admission.shed")
+_M_SERVICE_MS = _metrics.histogram("service.admission.service_ms")
+_M_TURNAROUND_MS = _metrics.histogram("service.admission.turnaround_ms")
 
 
 def flatten_named(tree) -> Dict[str, np.ndarray]:
@@ -138,6 +146,9 @@ class AdmissionController:
         ``service_s`` feeds the shedding estimate."""
         if service_s < 0:
             return
+        _M_SERVICE_MS.observe(service_s * 1e3)
+        if turnaround_s is not None and turnaround_s >= 0:
+            _M_TURNAROUND_MS.observe(turnaround_s * 1e3)
         with self._lock:
             a = self.ewma_alpha
             self.ema_service = (service_s if not self.samples
@@ -168,6 +179,7 @@ class AdmissionController:
         with self._lock:
             if (budget is not None and est * self.safety > budget):
                 self.shed += 1
+                _M_SHED.inc()
                 raise MercuryError(
                     Ret.OVERLOAD,
                     f"estimated completion {est * 1e3:.0f}ms exceeds the "
@@ -175,6 +187,7 @@ class AdmissionController:
                     f"(backlog {backlog}, ema {self.ema_service * 1e3:.0f}"
                     f"ms)")
             self.admitted += 1
+            _M_ADMITTED.inc()
 
     def stats(self) -> dict:
         with self._lock:

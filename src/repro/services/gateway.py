@@ -47,7 +47,17 @@ from ..core.bulk import BulkDescriptor
 from ..core.executor import Engine
 from ..core.types import Ret
 from ..serve.engine import Request, ServeEngine
+from ..telemetry import metrics as _metrics
+from ..telemetry import trace as _trace
 from .base import AdmissionController
+
+# unified metrics: gateway serve-path totals (fab.metrics exports these;
+# the per-gateway view stays in gen.stats)
+_M_SUBMITS = _metrics.counter("service.gateway.submits")
+_M_COMPLETIONS = _metrics.counter("service.gateway.completions")
+_M_TOKENS_OUT = _metrics.counter("service.gateway.tokens_out")
+_M_QUEUE_MS = _metrics.histogram("service.gateway.queue_ms")
+_M_SERVICE_MS = _metrics.histogram("service.gateway.service_ms")
 
 
 class ServingGateway:
@@ -59,6 +69,7 @@ class ServingGateway:
                  member_id: Optional[str] = None):
         self.engine = engine
         self.serve = serve
+        self.service = service
         self.requests: Dict[int, Request] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -129,11 +140,28 @@ class ServingGateway:
         # a burst and over-shed until the EWMA re-converged.  submit→done
         # is still recorded separately (ema_turnaround_ms in gen.stats).
         t_in = req.t_submit or t0
+        _M_SUBMITS.inc()
+        # the serve span outlives the RPC handler (gen.submit returns a
+        # rid immediately): child of the ambient server span, finished
+        # from the request's done callback with queue/service timings
+        # split on the engine's slot-admission stamp
+        span = _trace.start_span(f"{self.service}.serve", _trace.current())
 
         def _observe():
             now = time.monotonic()
-            self.admission.observe(now - (req.t_admit or t_in),
-                                   turnaround_s=now - t_in)
+            queue_s = max((req.t_admit or t_in) - t_in, 0.0)
+            service_s = now - (req.t_admit or t_in)
+            self.admission.observe(service_s, turnaround_s=now - t_in)
+            _M_COMPLETIONS.inc()
+            _M_TOKENS_OUT.inc(len(req.out_tokens))
+            _M_QUEUE_MS.observe(queue_s * 1e3)
+            _M_SERVICE_MS.observe(service_s * 1e3)
+            if span.recorded:
+                span.annotate(rid=req.rid,
+                              queue_ms=round(queue_s * 1e3, 3),
+                              service_ms=round(service_s * 1e3, 3),
+                              new_tokens=len(req.out_tokens))
+            span.finish("OK")
 
         req.add_done_callback(_observe)
         return req

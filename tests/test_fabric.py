@@ -873,3 +873,29 @@ def test_datafeed_resolvable_by_name(reg):
         np.testing.assert_array_equal(b["tokens"],
                                       src.batch_at(3)["tokens"])
         fs.close()
+
+
+def test_services_read_is_token_cached_and_evicts_on_epoch_bump(reg):
+    """``fab.services`` carries the authoritative ``(nonce, epoch)``
+    token: the client caches it under that token (not merely TTL) and an
+    epoch bump evicts — a long TTL must NOT serve the stale service
+    list once the registry's token has advanced."""
+    reg_e, _ = reg
+    with Engine("tcp://127.0.0.1:0") as ce, \
+            Engine("tcp://127.0.0.1:0") as we:
+        cli = RegistryClient(ce, reg_e.uri, cache_ttl=30.0)
+        writer = RegistryClient(we, reg_e.uri)
+        writer.register("alpha", "tcp://127.0.0.1:1111")
+        assert cli.services() == ["alpha"]
+        tok = cli.cache.stats()["token"]
+        # the token came from the fab.services response itself
+        assert tok["nonce"] is not None and tok["epoch"] >= 0
+        assert cli.cache.stats()["entries"] >= 1
+        ev0 = cli.cache.stats()["evictions"]
+
+        writer.register("beta", "tcp://127.0.0.1:2222")   # epoch bump
+        # a cheap epoch poll reveals the bump and evicts the cached list
+        # (the 30s TTL alone could never explain the refreshed read)
+        cli.epoch(fresh=True)
+        assert cli.cache.stats()["evictions"] > ev0
+        assert cli.services() == ["alpha", "beta"]

@@ -192,3 +192,75 @@ def test_local_cancel_storm_settles_every_future():
         for t in threads:
             t.join(timeout=10.0)
         assert not errors
+
+
+# ---------------------------------------------------------------------------
+# Wire-format cross-version compatibility (v5 trace fields, v4 peers)
+# ---------------------------------------------------------------------------
+def test_v5_request_header_roundtrips_trace_context():
+    from repro.core.types import (REQUEST_HEADER_SIZE, Flags, RequestHeader)
+    tid = bytes(range(16))
+    hdr = RequestHeader(rpc_id=7, cookie=9, flags=Flags.CHECKSUM,
+                        payload_len=3, payload_crc=0xAB, budget_ms=1500,
+                        trace_id=tid, span_id=0x1234, trace_flags=1)
+    raw = hdr.pack()
+    assert len(raw) == REQUEST_HEADER_SIZE == 64
+    out = RequestHeader.unpack(raw)
+    assert out == hdr
+    assert out.wire_size == REQUEST_HEADER_SIZE
+
+
+def test_v4_request_header_decodes_cleanly():
+    """A v4 peer's 36-byte header (no trace fields) decodes with zeroed
+    trace context and the right body offset (wire_size, not the v5
+    constant)."""
+    from repro.core.types import (REQUEST_HEADER_SIZE_V4, ZERO_TRACE_ID,
+                                  Flags, RequestHeader)
+    v4 = RequestHeader(rpc_id=7, cookie=9, flags=Flags.NONE,
+                       payload_len=5, budget_ms=250, version=4)
+    raw = v4.pack()
+    assert len(raw) == REQUEST_HEADER_SIZE_V4 == 36
+    out = RequestHeader.unpack(raw + b"hello")
+    assert out.version == 4
+    assert out.wire_size == REQUEST_HEADER_SIZE_V4
+    assert out.trace_id == ZERO_TRACE_ID
+    assert out.span_id == 0 and out.trace_flags == 0
+    assert (out.rpc_id, out.cookie, out.payload_len, out.budget_ms) \
+        == (7, 9, 5, 250)
+
+
+def test_unknown_request_version_rejected():
+    from repro.core.types import MercuryError, RequestHeader
+    bad = bytearray(RequestHeader(rpc_id=1, cookie=2).pack())
+    bad[4] = 6                                   # future version byte
+    with pytest.raises(MercuryError) as ei:
+        RequestHeader.unpack(bytes(bad))
+    assert ei.value.ret == Ret.PROTOCOL_ERROR
+
+
+def test_response_header_echoes_requester_version():
+    """Responses are byte-identical across v4/v5 (no trace fields): only
+    the version byte differs, echoed from the request, so a v4 peer's
+    responses neither grow nor get rejected."""
+    from repro.core.types import (RESPONSE_HEADER_SIZE, ResponseHeader)
+    r5 = ResponseHeader(cookie=3, ret=Ret.SUCCESS, payload_len=2)
+    r4 = ResponseHeader(cookie=3, ret=Ret.SUCCESS, payload_len=2, version=4)
+    assert len(r5.pack()) == len(r4.pack()) == RESPONSE_HEADER_SIZE == 24
+    assert r5.pack()[5:] == r4.pack()[5:]        # only the version differs
+    assert ResponseHeader.unpack(r4.pack()).version == 4
+    assert ResponseHeader.unpack(r5.pack()).version == 5
+    from repro.core.types import MercuryError
+    bad = bytearray(r5.pack())
+    bad[4] = 3                                   # pre-compat version
+    with pytest.raises(MercuryError):
+        ResponseHeader.unpack(bytes(bad))
+
+
+def test_trace_context_not_packed_when_untraced():
+    """An untraced request carries all-zero trace fields (the common
+    case): no id allocation, no flag bits."""
+    from repro.core.types import RequestHeader, ZERO_TRACE_ID
+    raw = RequestHeader(rpc_id=1, cookie=2).pack()
+    out = RequestHeader.unpack(raw)
+    assert out.trace_id == ZERO_TRACE_ID
+    assert out.span_id == 0 and out.trace_flags == 0

@@ -151,3 +151,55 @@ def test_cancel_inflight_expected_recv():
     finally:
         a.finalize()
         b.finalize()
+
+
+def test_v4_peer_request_decodes_and_response_does_not_grow():
+    """Cross-version wire compat: a v4 peer's 36-byte request header (no
+    trace fields) must decode cleanly, dispatch, and be answered with the
+    same 20-byte response layout the old peer expects — version byte
+    echoed as 4, nothing appended."""
+    from repro.core import proc as hg_proc
+    from repro.core.types import (RESPONSE_HEADER_SIZE, Flags,
+                                  RequestHeader, ResponseHeader,
+                                  payload_crc32, stable_rpc_id)
+    K_EXP = 2
+    srv = Engine("tcp://127.0.0.1:0")
+    try:
+        srv.register("echo", lambda x: {"got": x})
+        host, port = srv.uri[len("tcp://"):].rsplit(":", 1)
+        s = socket.create_connection((host, int(port)))
+        payload = bytes(hg_proc.encode(hg_proc.proc_any, [1, 2, 3]))
+        hdr = RequestHeader(rpc_id=stable_rpc_id("echo"), cookie=77,
+                            flags=Flags.CHECKSUM, payload_len=len(payload),
+                            payload_crc=payload_crc32(payload),
+                            budget_ms=5000, version=4)
+        raw = hdr.pack()
+        assert len(raw) == 36                    # legacy layout on the wire
+        s.sendall(_frames(K_HELLO, b"tcp://v4-peer.test:1") +
+                  _frames(K_UNEXP, _TAG.pack(77) + raw + payload))
+
+        buf, rsp = b"", None
+        s.settimeout(10.0)
+        while rsp is None:
+            chunk = s.recv(65536)
+            assert chunk, "server dropped the v4 peer's connection"
+            buf += chunk
+            while len(buf) >= _FRAME_HDR.size:
+                ln, kind = _FRAME_HDR.unpack_from(buf)
+                if len(buf) < _FRAME_HDR.size + ln - 1:
+                    break
+                body = buf[_FRAME_HDR.size:_FRAME_HDR.size + ln - 1]
+                buf = buf[_FRAME_HDR.size + ln - 1:]
+                if kind == K_EXP:
+                    assert _TAG.unpack_from(body)[0] == 77
+                    rsp = body[_TAG.size:]
+                    break
+        out = ResponseHeader.unpack(rsp)
+        assert out.version == 4                  # echoed, not upgraded
+        assert out.cookie == 77 and out.ret == Ret.SUCCESS
+        body = rsp[RESPONSE_HEADER_SIZE:]        # did not grow: 24B header
+        assert len(body) == out.payload_len
+        assert hg_proc.decode(hg_proc.proc_any, body) == {"got": [1, 2, 3]}
+        s.close()
+    finally:
+        srv.shutdown()

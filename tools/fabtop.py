@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""fabtop — a live console for the fabric's telemetry plane.
+
+Polls ``fab.metrics`` (and, best-effort, ``gen.stats``) on every target
+and renders one refreshing screen: counters as rates, histograms as
+count/avg/p~99, per-gateway serve stats when available.  Dependency-free
+(ANSI escapes only); any engine that is up answers — gateways, registry
+nodes, checkpoint servers — because every listening Engine registers
+``fab.metrics``/``dbg.trace``.
+
+Usage:
+  PYTHONPATH=src python tools/fabtop.py tcp://127.0.0.1:7701,tcp://127.0.0.1:7702
+  PYTHONPATH=src python tools/fabtop.py --once tcp://10.0.0.1:7700
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.executor import Engine
+
+CLEAR = "\x1b[2J\x1b[H"
+BOLD = "\x1b[1m"
+DIM = "\x1b[2m"
+RESET = "\x1b[0m"
+
+
+def fetch(client: Engine, target: str, timeout: float) -> dict:
+    out = {"uri": target, "ok": False}
+    try:
+        m = client.call(target, "fab.metrics", {}, timeout=timeout)
+        out.update(ok=True, pid=m.get("pid"), engine_uri=m.get("uri"),
+                   metrics=m.get("metrics", {}))
+    except Exception as e:
+        out["error"] = f"{type(e).__name__}: {e}"
+        return out
+    try:  # best-effort: only gateways serve gen.stats
+        out["gen"] = client.call(target, "gen.stats", {}, timeout=timeout)
+    except Exception:
+        pass
+    return out
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, float):
+        return f"{v:,.2f}"
+    return f"{v:,}"
+
+
+def _rate(cur: dict, prev: dict, key: str, dt: float) -> str:
+    if not prev or dt <= 0:
+        return ""
+    d = cur.get(key, 0) - prev.get(key, 0)
+    return f" ({d / dt:,.1f}/s)" if d else ""
+
+
+def render(snaps: list, prevs: dict, dt: float, verbose: bool) -> str:
+    lines = [f"{BOLD}fabtop{RESET}  {time.strftime('%H:%M:%S')}   "
+             f"{len([s for s in snaps if s['ok']])}/{len(snaps)} targets up"]
+    for s in snaps:
+        lines.append("")
+        if not s["ok"]:
+            lines.append(f"{BOLD}{s['uri']}{RESET}  {DIM}DOWN "
+                         f"{s.get('error', '')}{RESET}")
+            continue
+        lines.append(f"{BOLD}{s['uri']}{RESET}  pid={s['pid']}")
+        m = s.get("metrics", {})
+        prev = prevs.get(s["uri"], {})
+        ctr, pctr = m.get("counters", {}), prev.get("counters", {})
+        if ctr:
+            lines.append(f"  {DIM}counters{RESET}")
+            for k, v in ctr.items():
+                if not verbose and not v:
+                    continue
+                lines.append(f"    {k:<40} {_fmt_val(v):>12}"
+                             f"{_rate(ctr, pctr, k, dt)}")
+        gauges = m.get("gauges", {})
+        live = {k: v for k, v in gauges.items() if verbose or v}
+        if live:
+            lines.append(f"  {DIM}gauges{RESET}")
+            for k, v in live.items():
+                lines.append(f"    {k:<40} {_fmt_val(v):>12}")
+        hists = m.get("histograms", {})
+        live_h = {k: h for k, h in hists.items()
+                  if verbose or h.get("count")}
+        if live_h:
+            lines.append(f"  {DIM}histograms{RESET}")
+            for k, h in live_h.items():
+                lines.append(
+                    f"    {k:<40} n={h['count']:<8} avg={h['avg']:<10} "
+                    f"max={h['max']}")
+        gen = s.get("gen")
+        if gen:
+            lines.append(f"  {DIM}gen.stats{RESET}  "
+                         f"load={gen.get('load')} "
+                         f"queued={gen.get('queued')} "
+                         f"active={gen.get('active_slots')} "
+                         f"admitted={gen.get('admitted')} "
+                         f"shed={gen.get('shed')} "
+                         f"ema_service_ms={gen.get('ema_service_ms', 0):.1f}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="live console over fab.metrics / gen.stats")
+    ap.add_argument("targets",
+                    help="comma-separated engine URIs to poll "
+                         "(tcp://host:port,...)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh period in seconds (default 1.0)")
+    ap.add_argument("--timeout", type=float, default=2.0,
+                    help="per-target RPC timeout (default 2.0)")
+    ap.add_argument("--once", action="store_true",
+                    help="print one snapshot (no clear, no loop) and exit")
+    ap.add_argument("--verbose", action="store_true",
+                    help="include zero-valued instruments")
+    args = ap.parse_args(argv)
+    targets = [t.strip() for t in args.targets.split(",") if t.strip()]
+    if not targets:
+        ap.error("no targets")
+
+    prevs: dict = {}
+    last_t = time.monotonic()
+    with Engine("tcp://127.0.0.1:0") as client:
+        while True:
+            snaps = [fetch(client, t, args.timeout) for t in targets]
+            now = time.monotonic()
+            out = render(snaps, prevs, now - last_t, args.verbose)
+            last_t = now
+            prevs = {s["uri"]: s.get("metrics", {})
+                     for s in snaps if s["ok"]}
+            if args.once:
+                print(out)
+                return 0
+            sys.stdout.write(CLEAR + out + "\n")
+            sys.stdout.flush()
+            try:
+                time.sleep(args.interval)
+            except KeyboardInterrupt:
+                return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
