@@ -1,0 +1,26 @@
+"""Concurrency-invariant analysis for the RPC fabric (DESIGN.md §11).
+
+Two analyzers, one vocabulary:
+
+  * :mod:`repro.analysis.lint` (**fablint**) — an AST-based static pass
+    over the source tree that enforces the project's concurrency
+    conventions: ``#: guarded-by`` field discipline, no blocking
+    operations under a lock, span lifecycle, monotonic-clock
+    discipline, thread hygiene, and metrics-cardinality policy.
+    Run it as ``python -m repro.analysis.lint src/``.
+
+  * :mod:`repro.analysis.lockdep` — an opt-in runtime sanitizer
+    (``REPRO_LOCKDEP=1``) that wraps the fabric's locks, records the
+    cross-thread acquisition-order graph, flags order cycles
+    (potential deadlocks) and locks held across an RPC boundary, and
+    exports per-lock hold-time histograms through the metrics
+    registry.
+
+Static analysis proves lexical discipline; the sanitizer catches what
+statics cannot (actual cross-object acquisition order at runtime).
+They are designed to be run together in CI — see the ``analysis`` job.
+"""
+# Submodules are imported lazily (``from repro.analysis import lint``)
+# so ``python -m repro.analysis.lint`` does not double-import the
+# module it is about to execute.
+__all__ = ["lint", "lockdep"]

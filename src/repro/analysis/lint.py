@@ -1,0 +1,734 @@
+"""fablint — AST-based concurrency-invariant lint for the RPC fabric.
+
+Usage::
+
+    python -m repro.analysis.lint src/            # lint a tree
+    python -m repro.analysis.lint a.py b.py       # lint files
+
+The rules are project-specific (see DESIGN.md §11 for the catalogue and
+the motivating pre-fix violation behind each one):
+
+``guarded-by``
+    Attributes annotated ``#: guarded-by _lock`` may only be read or
+    written under ``with self._lock`` (aliases: ``#: guarded-by
+    _cq_lock,_cq_cv`` accepts either name; a ``threading.Condition``
+    built over an existing lock aliases automatically).  Methods whose
+    name ends in ``_locked`` — the repo's convention for
+    must-be-called-under-the-lock helpers — or carrying a
+    ``#: requires _lock`` comment are assumed to hold the lock at
+    entry.  ``__init__`` is exempt (the object is not shared yet).
+
+``lock-blocking``
+    No blocking operation while holding a lock: ``Handle.forward``,
+    ``call``/``call_async``/``call_each``/``call_on``/``call_routed``,
+    socket ``send``/``recv``/``sendall``, ``Future.result``,
+    ``Thread.join``, ``Event.wait`` (waiting *on the held lock's own
+    condition variable* is the one allowed wait), ``time.sleep``, and
+    proc ``encode``/``decode`` (two-argument form — the PR-5
+    gossip-stats bug class).
+
+``span-finish``
+    Every ``trace.start_span()``/``start_trace()`` must be finished on
+    all paths: a ``finally`` block, an except-handler *plus* the
+    fall-through path, or ownership handed off (returned, stored,
+    passed to a callback/closure).
+
+``wallclock``
+    ``time.time()`` is banned — lease/TTL/deadline arithmetic must use
+    ``time.monotonic()``.  The deliberate wall-clock sites (human-facing
+    timestamps, the wire-age translation boundary) live in the baseline
+    file.
+
+``thread-hygiene``
+    Every ``threading.Thread`` is created ``daemon=True`` or joined
+    (PR-5's wedged-interpreter-exit bug class).
+
+``metric-cardinality``
+    Metric names are string literals and label values come from bounded
+    sets — no f-strings, concatenation, or formatting in either
+    (DESIGN.md §10's cardinality policy).
+
+Suppressions: an inline ``# fablint: ok[rule-id] reason`` comment on
+the flagged line waives it in place; the checked-in baseline file
+(``baseline.txt`` next to this module) lists the few deliberate
+exceptions as ``rule-id path::qualname  # reason`` lines.  A baseline
+entry that no longer matches anything is itself an error ("baseline
+drift") so the file can only shrink.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import os
+import re
+import sys
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+GUARD_RE = re.compile(r"#:\s*guarded-by\s+([\w.|,]+)")
+REQUIRES_RE = re.compile(r"#:\s*requires\s+([\w.|,]+)")
+OK_RE = re.compile(r"#\s*fablint:\s*ok\[([\w-]+)\]\s*(.*)")
+LOCKISH_RE = re.compile(r"lock|cv|cond|wakeup|mutex", re.IGNORECASE)
+
+BLOCKING_ATTRS = {
+    "forward", "call", "call_async", "call_each", "call_on", "call_routed",
+    "result", "recv", "sendall",
+}
+# ``.join(`` is only a blocking op when the receiver looks like a thread
+# (str/bytes/os.path joins are everywhere)
+THREADISH_RE = re.compile(r"^(t\d*|thr\w*|\w*thread\w*|worker\w*)$",
+                          re.IGNORECASE)
+LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                  "BoundedSemaphore"}
+METRIC_FACTORIES = {"counter", "gauge", "histogram"}
+
+RULES = ("guarded-by", "lock-blocking", "span-finish", "wallclock",
+         "thread-hygiene", "metric-cardinality")
+
+
+@dataclass
+class Violation:
+    rule: str
+    path: str
+    line: int
+    qualname: str
+    msg: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule} {norm_path(self.path)}::{self.qualname}"
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"({self.qualname}) {self.msg}")
+
+
+def norm_path(path: str) -> str:
+    """Stable key: the path from the last ``repro/`` (or ``tests/``)
+    component on, so the same baseline matches ``src/repro/...``,
+    ``./repro/...`` and absolute paths."""
+    p = path.replace(os.sep, "/")
+    for marker in ("repro/", "tests/"):
+        idx = p.rfind(marker)
+        if idx >= 0:
+            return p[idx:]
+    return p.lstrip("./")
+
+
+def _split_locks(spec: str) -> Set[str]:
+    return {s for s in re.split(r"[|,]", spec) if s}
+
+
+# ---------------------------------------------------------------------------
+# per-class / per-module collected facts
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    locks: Set[str] = field(default_factory=set)
+    guards: Dict[str, Set[str]] = field(default_factory=dict)
+    # condition-variable aliasing: Condition(self._lock) means holding
+    # either name satisfies a guard naming the other
+    aliases: Dict[str, Set[str]] = field(default_factory=dict)
+
+    def alias_closure(self, names: Iterable[str]) -> Set[str]:
+        out = set(names)
+        for n in list(out):
+            out |= self.aliases.get(n, set())
+        return out
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    comments: Dict[int, str]
+    own_line: Set[int] = field(default_factory=set)       # standalone comments
+    locks: Set[str] = field(default_factory=set)          # module-level
+    guards: Dict[str, Set[str]] = field(default_factory=dict)
+
+    def comment_above(self, line: int) -> str:
+        """Comment on the line above — only if it is a standalone comment
+        (a trailing comment belongs to *its* line, not the next one)."""
+        if line - 1 in self.own_line:
+            return self.comments.get(line - 1, "")
+        return ""
+
+    def comment_near(self, line: int) -> str:
+        return self.comments.get(line, "") + " " + self.comment_above(line)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        for text in (self.comments.get(line, ""), self.comment_above(line)):
+            m = OK_RE.search(text)
+            if m and m.group(1) == rule:
+                return True
+        return False
+
+
+def _collect_comments(source: str) -> Tuple[Dict[int, str], Set[int]]:
+    comments: Dict[int, str] = {}
+    own_line: Set[int] = set()
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+                if not tok.line[:tok.start[1]].strip():
+                    own_line.add(tok.start[0])
+    except tokenize.TokenError:
+        pass
+    return comments, own_line
+
+
+def _is_lock_factory(call: ast.Call) -> bool:
+    fn = call.func
+    if isinstance(fn, ast.Attribute) and fn.attr in LOCK_FACTORIES:
+        return True
+    if isinstance(fn, ast.Name) and fn.id in LOCK_FACTORIES:
+        return True
+    # dataclass field(default_factory=threading.Lock)
+    if isinstance(fn, ast.Name) and fn.id == "field":
+        for kw in call.keywords:
+            if kw.arg == "default_factory":
+                v = kw.value
+                if isinstance(v, ast.Attribute) and v.attr in LOCK_FACTORIES:
+                    return True
+                if isinstance(v, ast.Name) and v.id in LOCK_FACTORIES:
+                    return True
+    return False
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """``self.a`` -> "a"; ``self.a.b`` -> "a.b"; else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name) and cur.id == "self" and parts:
+        return ".".join(reversed(parts))
+    return None
+
+
+def _collect_class(cls: ast.ClassDef, mod: ModuleInfo) -> ClassInfo:
+    info = ClassInfo(cls.name)
+
+    def note_guard(attr: str, line: int, end_line: int) -> None:
+        texts = [mod.comment_above(line), mod.comments.get(line, ""),
+                 mod.comments.get(end_line, "")]
+        for text in texts:
+            m = GUARD_RE.search(text)
+            if m:
+                info.guards[attr] = _split_locks(m.group(1))
+                info.locks |= {g for g in info.guards[attr]
+                               if "." not in g}
+                return
+
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            attr = _self_attr(node.targets[0])
+            if attr is None and isinstance(node.targets[0], ast.Name):
+                attr = node.targets[0].id          # class-body assignment
+            if attr is None or "." in attr:
+                continue
+            if isinstance(node.value, ast.Call) and \
+                    _is_lock_factory(node.value):
+                info.locks.add(attr)
+                call = node.value
+                fn = call.func
+                cond = (isinstance(fn, ast.Attribute) and
+                        fn.attr == "Condition") or \
+                       (isinstance(fn, ast.Name) and fn.id == "Condition")
+                if cond and call.args:
+                    base = _self_attr(call.args[0])
+                    if base:
+                        info.aliases.setdefault(attr, set()).add(base)
+                        info.aliases.setdefault(base, set()).add(attr)
+            note_guard(attr, node.lineno, node.end_lineno or node.lineno)
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            attr = node.target.id                  # dataclass field
+            if isinstance(node.value, ast.Call) and \
+                    _is_lock_factory(node.value):
+                info.locks.add(attr)
+            note_guard(attr, node.lineno, node.end_lineno or node.lineno)
+    return info
+
+
+def _collect_module(tree: ast.Module, mod: ModuleInfo) -> None:
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if isinstance(node.value, ast.Call) and \
+                    _is_lock_factory(node.value):
+                mod.locks.add(name)
+            for text in (mod.comment_above(node.lineno),
+                         mod.comments.get(node.lineno, ""),
+                         mod.comments.get(node.end_lineno or node.lineno, "")):
+                m = GUARD_RE.search(text)
+                if m:
+                    mod.guards[name] = _split_locks(m.group(1))
+                    break
+
+
+# ---------------------------------------------------------------------------
+# the checker
+
+
+class _FunctionChecker(ast.NodeVisitor):
+    """Walks one top-level function/method, tracking lexically held
+    locks through ``with`` statements (nested defs inherit the lexical
+    held-set: a closure defined under a lock runs its enclosing
+    critical section's discipline)."""
+
+    def __init__(self, linter: "Linter", mod: ModuleInfo,
+                 cls: Optional[ClassInfo], qualname: str, fn: ast.AST):
+        self.linter = linter
+        self.mod = mod
+        self.cls = cls
+        self.qualname = qualname
+        self.fn = fn
+        self.held: List[str] = []
+        self.local_locks: Set[str] = set()
+        self.spans: Dict[str, dict] = {}
+        self.in_init = qualname.split(".")[-1] == "__init__"
+        # context flags for span-finish classification
+        self._in_finally = 0
+        self._in_except = 0
+        self._in_closure = 0
+        self._calls_since: Dict[str, int] = {}
+
+    # -- plumbing ----------------------------------------------------------
+
+    def err(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.linter.add(Violation(rule, self.mod.path, node.lineno,
+                                  self.qualname, msg))
+
+    def _lock_token(self, node: ast.expr) -> Optional[str]:
+        """Render a with-item / wait-target expression to a lock token."""
+        attr = _self_attr(node)
+        if attr is not None:
+            if attr.split(".")[-1] in (self.cls.locks if self.cls else set()) \
+                    or LOCKISH_RE.search(attr.split(".")[-1]) \
+                    or (self.cls and attr in
+                        {g for gs in self.cls.guards.values() for g in gs}):
+                return attr
+            return None
+        if isinstance(node, ast.Name):
+            if node.id in self.mod.locks or node.id in self.local_locks or \
+                    LOCKISH_RE.search(node.id):
+                return node.id
+            return None
+        if isinstance(node, ast.Attribute):
+            # non-self attribute chain, e.g. ``peer._lock``
+            if LOCKISH_RE.search(node.attr):
+                return f"<{node.attr}>"
+        return None
+
+    def _held_satisfies(self, wanted: Set[str]) -> bool:
+        if not self.held:
+            return False
+        want = self.cls.alias_closure(wanted) if self.cls else set(wanted)
+        for h in self.held:
+            if h in want or h.split(".")[-1] in want:
+                return True
+        return False
+
+    # -- statements --------------------------------------------------------
+
+    def visit_With(self, node: ast.With) -> None:
+        tokens = []
+        for item in node.items:
+            tok = self._lock_token(item.context_expr)
+            if tok is not None:
+                tokens.append(tok)
+        self.held.extend(tokens)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in tokens:
+            self.held.pop()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if isinstance(node.value, ast.Call):
+                if _is_lock_factory(node.value):
+                    self.local_locks.add(name)
+                fn = node.value.func
+                attr = fn.attr if isinstance(fn, ast.Attribute) else \
+                    (fn.id if isinstance(fn, ast.Name) else "")
+                if attr in ("start_span", "start_trace"):
+                    self.spans[name] = {
+                        "node": node, "finished": False, "plain": False,
+                        "safe": False, "except": False,
+                        "calls_after_plain": False,
+                    }
+                    self.generic_visit(node.value)
+                    return
+        self.generic_visit(node)
+
+    def visit_Try(self, node: ast.Try) -> None:
+        for stmt in node.body:
+            self.visit(stmt)
+        self._in_except += 1
+        for handler in node.handlers:
+            for stmt in handler.body:
+                self.visit(stmt)
+        self._in_except -= 1
+        for stmt in node.orelse:
+            self.visit(stmt)
+        self._in_finally += 1
+        for stmt in node.finalbody:
+            self.visit(stmt)
+        self._in_finally -= 1
+
+    def _visit_nested(self, node: ast.AST) -> None:
+        self._in_closure += 1
+        self.generic_visit(node)
+        self._in_closure -= 1
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_nested(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_nested(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_nested(node)
+
+    def visit_Return(self, node: ast.Return) -> None:
+        if isinstance(node.value, ast.Name) and node.value.id in self.spans:
+            self.spans[node.value.id]["safe"] = True
+        self.generic_visit(node)
+
+    # -- expressions -------------------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.cls and not self.in_init:
+            attr = _self_attr(node)
+            if attr in self.cls.guards and \
+                    not GUARD_RE.search(self.mod.comment_near(node.lineno)):
+                if not self._held_satisfies(self.cls.guards[attr]):
+                    if not self.mod.suppressed("guarded-by", node.lineno):
+                        locks = ",".join(sorted(self.cls.guards[attr]))
+                        self.err("guarded-by", node,
+                                 f"'self.{attr}' is guarded by '{locks}' "
+                                 f"but accessed without holding it")
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if node.id in self.mod.guards and \
+                not GUARD_RE.search(self.mod.comment_near(node.lineno)):
+            if not self._held_satisfies_module(self.mod.guards[node.id]):
+                if not self.mod.suppressed("guarded-by", node.lineno):
+                    locks = ",".join(sorted(self.mod.guards[node.id]))
+                    self.err("guarded-by", node,
+                             f"'{node.id}' is guarded by '{locks}' "
+                             f"but accessed without holding it")
+        self.generic_visit(node)
+
+    def _held_satisfies_module(self, wanted: Set[str]) -> bool:
+        return any(h in wanted for h in self.held)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        fn_attr = fn.attr if isinstance(fn, ast.Attribute) else None
+        fn_name = fn.id if isinstance(fn, ast.Name) else None
+
+        # span bookkeeping: x.finish(...) / escape via call argument
+        if fn_attr == "finish" and isinstance(fn.value, ast.Name) and \
+                fn.value.id in self.spans:
+            rec = self.spans[fn.value.id]
+            rec["finished"] = True
+            if self._in_finally or self._in_closure:
+                rec["safe"] = True
+            elif self._in_except:
+                rec["except"] = True
+            else:
+                rec["plain"] = True
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name) and arg.id in self.spans:
+                self.spans[arg.id]["safe"] = True
+
+        self._check_blocking(node, fn_attr, fn_name)
+        self._check_wallclock(node, fn_attr, fn_name)
+        self._check_thread(node, fn_attr, fn_name)
+        self._check_metric(node, fn_attr, fn_name)
+        self.generic_visit(node)
+
+    # -- the rules ---------------------------------------------------------
+
+    def _check_blocking(self, node: ast.Call, fn_attr, fn_name) -> None:
+        if not self.held:
+            return
+        blocked = None
+        if fn_attr in BLOCKING_ATTRS:
+            blocked = fn_attr
+        elif fn_attr == "join":
+            recv = node.func.value
+            name = _self_attr(recv) or \
+                (recv.id if isinstance(recv, ast.Name) else "")
+            if name and THREADISH_RE.match(name.split(".")[-1]):
+                blocked = "join"
+        elif fn_attr == "wait":
+            target = self._lock_token(node.func.value)
+            waited = _self_attr(node.func.value) or \
+                (node.func.value.id if isinstance(node.func.value, ast.Name)
+                 else None)
+            allowed = False
+            if target is not None or waited is not None:
+                name = (target or waited)
+                names = {name, name.split(".")[-1]}
+                if self.cls:
+                    names = self.cls.alias_closure(names)
+                allowed = any(h in names or h.split(".")[-1] in names
+                              for h in self.held)
+            if not allowed:
+                blocked = "wait"
+        elif fn_attr == "send":
+            # socket/pipe send; exempt generator.send-style single use on
+            # lockish objects is not a thing in this tree
+            blocked = "send"
+        elif fn_attr in ("encode", "decode") and len(node.args) >= 2:
+            blocked = fn_attr
+        elif (fn_attr == "sleep" and isinstance(node.func.value, ast.Name)
+              and node.func.value.id == "time") or fn_name == "sleep":
+            blocked = "sleep"
+        if blocked and not self.mod.suppressed("lock-blocking", node.lineno):
+            self.err("lock-blocking", node,
+                     f"blocking operation '{blocked}' while holding "
+                     f"lock(s) {sorted(set(self.held))}")
+
+    def _check_wallclock(self, node: ast.Call, fn_attr, fn_name) -> None:
+        is_time = (fn_attr == "time" and
+                   isinstance(node.func.value, ast.Name) and
+                   node.func.value.id == "time")
+        if is_time and not self.mod.suppressed("wallclock", node.lineno):
+            self.err("wallclock", node,
+                     "time.time() is banned (use time.monotonic(); "
+                     "wall clock only at annotated boundaries)")
+
+    def _check_thread(self, node: ast.Call, fn_attr, fn_name) -> None:
+        is_thread = (fn_attr == "Thread" and
+                     isinstance(node.func.value, ast.Name) and
+                     node.func.value.id == "threading") or \
+                    fn_name == "Thread"
+        if not is_thread:
+            return
+        for kw in node.keywords:
+            if kw.arg == "daemon" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True:
+                return
+        if self.mod.suppressed("thread-hygiene", node.lineno):
+            return
+        if self.linter.scope_has_join(self.mod.path, node):
+            return
+        self.err("thread-hygiene", node,
+                 "threading.Thread is neither daemon=True nor joined "
+                 "in its owning scope (wedges interpreter exit)")
+
+    def _check_metric(self, node: ast.Call, fn_attr, fn_name) -> None:
+        if fn_attr not in METRIC_FACTORIES:
+            return
+        base = node.func.value
+        if not (isinstance(base, ast.Name) and
+                base.id.lstrip("_") in ("metrics", "m")):
+            return
+        if self.mod.suppressed("metric-cardinality", node.lineno):
+            return
+        if not node.args or not (isinstance(node.args[0], ast.Constant) and
+                                 isinstance(node.args[0].value, str)):
+            self.err("metric-cardinality", node,
+                     "metric name must be a string literal "
+                     "(unbounded names explode the registry)")
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            if not isinstance(kw.value, (ast.Constant, ast.Name,
+                                         ast.Attribute)):
+                self.err("metric-cardinality", node,
+                         f"label '{kw.arg}' value must be a literal or a "
+                         f"bounded-set variable, not an expression")
+
+    # -- finish ------------------------------------------------------------
+
+    def finalize(self) -> None:
+        for name, rec in self.spans.items():
+            node = rec["node"]
+            if self.mod.suppressed("span-finish", node.lineno):
+                continue
+            if rec["safe"]:
+                continue
+            if rec["except"] and rec["plain"]:
+                continue
+            if not rec["finished"]:
+                self.err("span-finish", node,
+                         f"span '{name}' is never finished "
+                         f"(use try/finally or hand it off)")
+            elif rec["plain"] and not rec["except"]:
+                self.err("span-finish", node,
+                         f"span '{name}' leaks if an exception is raised "
+                         f"before the straight-line finish "
+                         f"(use try/finally)")
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+class Linter:
+    def __init__(self) -> None:
+        self.violations: List[Violation] = []
+        self._join_cache: Dict[Tuple[str, int], bool] = {}
+        self._scopes: Dict[str, List[ast.AST]] = {}
+
+    def add(self, v: Violation) -> None:
+        self.violations.append(v)
+
+    def scope_has_join(self, path: str, thread_call: ast.Call) -> bool:
+        """True when any ``.join(`` call appears in the function or class
+        that owns the Thread() creation (deliberately coarse: the point
+        is catching threads nobody *ever* joins)."""
+        for scope in self._scopes.get(path, []):
+            lo = scope.lineno
+            hi = scope.end_lineno or scope.lineno
+            if not (lo <= thread_call.lineno <= hi):
+                continue
+            for sub in ast.walk(scope):
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr == "join":
+                    return True
+        return False
+
+    def check_source(self, source: str, path: str) -> List[Violation]:
+        before = len(self.violations)
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            self.add(Violation("parse", path, e.lineno or 0, "<module>",
+                               f"syntax error: {e.msg}"))
+            return self.violations[before:]
+        comments, own_line = _collect_comments(source)
+        mod = ModuleInfo(path, comments, own_line)
+        _collect_module(tree, mod)
+
+        # scopes for thread-hygiene join lookup: innermost-first order
+        scopes: List[ast.AST] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                scopes.append(node)
+        scopes.sort(key=lambda n: ((n.end_lineno or n.lineno) - n.lineno))
+        self._scopes[path] = scopes
+
+        def run(fn: ast.AST, cls: Optional[ClassInfo], qual: str) -> None:
+            chk = _FunctionChecker(self, mod, cls, qual, fn)
+            requires: Set[str] = set()
+            m = REQUIRES_RE.search(mod.comment_near(fn.lineno))
+            if m:
+                requires |= _split_locks(m.group(1))
+            if qual.split(".")[-1].endswith("_locked") and cls:
+                requires |= cls.locks | \
+                    {g for gs in cls.guards.values() for g in gs}
+            chk.held.extend(sorted(requires))
+            for stmt in fn.body:
+                chk.visit(stmt)
+            chk.finalize()
+
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                run(node, None, node.name)
+            elif isinstance(node, ast.ClassDef):
+                cinfo = _collect_class(node, mod)
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        run(sub, cinfo, f"{node.name}.{sub.name}")
+        return self.violations[before:]
+
+    def check_file(self, path: str) -> None:
+        with open(path, "r", encoding="utf-8") as f:
+            self.check_source(f.read(), path)
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.txt")
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """``rule path::qualname  # reason`` lines -> {key: reason}."""
+    entries: Dict[str, str] = {}
+    if not os.path.exists(path):
+        return entries
+    with open(path, "r", encoding="utf-8") as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            body, _, reason = line.partition("#")
+            parts = body.split()
+            if len(parts) != 2:
+                continue
+            entries[f"{parts[0]} {parts[1]}"] = reason.strip()
+    return entries
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="fablint: concurrency-invariant lint (DESIGN.md §11)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--baseline", default=default_baseline_path(),
+                    help="baseline file of documented exceptions")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything)")
+    args = ap.parse_args(argv)
+
+    linter = Linter()
+    n_files = 0
+    for path in iter_py_files(args.paths):
+        n_files += 1
+        linter.check_file(path)
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    used: Set[str] = set()
+    reported: List[Violation] = []
+    for v in linter.violations:
+        if v.key in baseline:
+            used.add(v.key)
+            continue
+        reported.append(v)
+
+    rc = 0
+    for v in reported:
+        print(v)
+        rc = 1
+    stale = set(baseline) - used
+    for key in sorted(stale):
+        print(f"baseline drift: entry no longer matches anything: {key}")
+        rc = 1
+    status = "clean" if rc == 0 else f"{len(reported)} violation(s)"
+    print(f"fablint: {n_files} file(s), {status}, "
+          f"{len(used)} baselined exception(s)", file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -148,9 +148,9 @@ class BulkOp:
 
     def __init__(self, total: int):
         self.total = total
-        self.transferred = 0
-        self.ret = Ret.SUCCESS
-        self.canceled = False
+        self.transferred = 0  #: guarded-by _lock
+        self.ret = Ret.SUCCESS  #: guarded-by _lock
+        self.canceled = False          # one-way latch; racy read is fine
         self._lock = threading.Lock()
 
 
@@ -216,7 +216,8 @@ def bulk_transfer(context: Context, op: BulkOpType, remote_addr: NAAddress,
             if state["done"]:
                 return
             state["done"] = True
-        bop.ret = ret
+        with bop._lock:
+            bop.ret = ret
         context.completion_add(cb, CallbackInfo(OpType.BULK, ret,
                                                 bulk_op=bop, arg=arg))
 
@@ -243,16 +244,19 @@ def bulk_transfer(context: Context, op: BulkOpType, remote_addr: NAAddress,
             def on_chunk(ret: Ret, _n=n_i):
                 with lock:
                     state["outstanding"] -= 1
-                if ret != Ret.SUCCESS:
-                    with lock:
+                    if ret != Ret.SUCCESS:
                         state["failed"] = ret
-                else:
+                    failed = state["failed"]
+                    outstanding = state["outstanding"]
+                moved = -1
+                if ret == Ret.SUCCESS:
                     with bop._lock:
                         bop.transferred += _n
-                if bop.transferred == size:
+                        moved = bop.transferred
+                if moved == size:
                     finish(Ret.SUCCESS)
-                elif state["failed"] is not None and state["outstanding"] == 0:
-                    finish(state["failed"])
+                elif failed is not None and outstanding == 0:
+                    finish(failed)
                 else:
                     pump()
 

@@ -65,9 +65,9 @@ class MultiPlugin(NAPlugin):
         # feeds a queue of logical recv ops (posting one recv per transport
         # per logical op would grow unboundedly under HGClass's repost loop)
         self._uq_lock = threading.Lock()
-        self._uq: Deque[Tuple[NAOp, NACallback]] = deque()
-        self._ustash: Deque[Tuple] = deque()
-        self._pumps_armed = False
+        self._uq: Deque[Tuple[NAOp, NACallback]] = deque()  #: guarded-by _uq_lock
+        self._ustash: Deque[Tuple] = deque()  #: guarded-by _uq_lock
+        self._pumps_armed = False  #: guarded-by _uq_lock
 
     def _route(self, addr: NAAddress) -> NAPlugin:
         p = self._by_scheme.get(scheme_of(addr.uri))

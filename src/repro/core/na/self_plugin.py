@@ -21,7 +21,7 @@ from ..types import MercuryError, Ret
 from .base import (NAAddress, NACallback, NACap, NAMemHandle, NAOp, NAPlugin,
                    TIER_SELF)
 
-_REGISTRY: Dict[str, "SelfPlugin"] = {}
+_REGISTRY: Dict[str, "SelfPlugin"] = {}  #: guarded-by _REGISTRY_LOCK
 _REGISTRY_LOCK = threading.Lock()
 _ANON = [0]
 
@@ -52,14 +52,14 @@ class SelfPlugin(NAPlugin):
         self._lock = threading.Lock()
         self._wakeup = threading.Condition(self._lock)
         # inbound queues (written by peers, drained by our progress())
-        self._in_unexpected: Deque[Tuple[str, int, bytes, NAOp, "SelfPlugin"]] = deque()
-        self._in_expected: Deque[Tuple[str, int, bytes, NAOp, "SelfPlugin"]] = deque()
+        self._in_unexpected: Deque[Tuple[str, int, bytes, NAOp, "SelfPlugin"]] = deque()  #: guarded-by _lock,_wakeup
+        self._in_expected: Deque[Tuple[str, int, bytes, NAOp, "SelfPlugin"]] = deque()  #: guarded-by _lock,_wakeup
         # posted receives
-        self._recv_unexpected: Deque[Tuple[NAOp, NACallback]] = deque()
-        self._recv_expected: List[Tuple[NAOp, Optional[str], int, NACallback]] = []
+        self._recv_unexpected: Deque[Tuple[NAOp, NACallback]] = deque()  #: guarded-by _lock,_wakeup
+        self._recv_expected: List[Tuple[NAOp, Optional[str], int, NACallback]] = []  #: guarded-by _lock,_wakeup
         # local completions to fire on next progress() (send/rma ops)
-        self._completions: Deque[Tuple[NAOp, NACallback, Tuple]] = deque()
-        self._mem: Dict[int, memoryview] = {}
+        self._completions: Deque[Tuple[NAOp, NACallback, Tuple]] = deque()  #: guarded-by _lock,_wakeup
+        self._mem: Dict[int, memoryview] = {}  #: guarded-by _lock,_wakeup
         self._finalized = False
 
     # -- addressing ----------------------------------------------------------

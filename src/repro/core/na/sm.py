@@ -75,7 +75,7 @@ K_EXP = 2
 _U64 = struct.Struct("<Q")
 
 # process-local instance registry: in-process RMA fast path + uri probing
-_PROCESS: Dict[str, "SMPlugin"] = {}
+_PROCESS: Dict[str, "SMPlugin"] = {}  #: guarded-by _PROCESS_LOCK
 _PROCESS_LOCK = threading.Lock()
 
 
@@ -247,7 +247,7 @@ class SMPlugin(NAPlugin):
         self._uri = uri
         self._digest = _digest(uri)
         self._lock = threading.Lock()
-        self._pending: Deque = deque()
+        self._pending: Deque = deque()  #: guarded-by _lock
 
         # control segment + doorbell, all inside the connect lock: stale
         # takeover must not race a second process claiming the same uri,
@@ -309,7 +309,7 @@ class SMPlugin(NAPlugin):
         # _tx_lock (one fewer handoff per hop — the shm latency win);
         # receive-side state stays owned by the progress thread.
         self._tx_lock = threading.Lock()
-        self._conns: Dict[str, _SMConn] = {}
+        self._conns: Dict[str, _SMConn] = {}  #: guarded-by _tx_lock
         self._recv_unexpected: Deque[Tuple[NAOp, NACallback]] = deque()
         self._in_unexpected: Deque[Tuple[str, int, memoryview]] = deque()
         self._recv_expected: List[Tuple[NAOp, Optional[str], int, NACallback]] = []
@@ -317,9 +317,9 @@ class SMPlugin(NAPlugin):
         self._completions: Deque[Tuple[NAOp, NACallback, Tuple]] = deque()
 
         # RMA state (shared with caller threads → _lock)
-        self._mem: Dict[int, Tuple[memoryview, bool, bool, Optional[int]]] = {}
-        self._allocs: List[Tuple[str, shared_memory.SharedMemory, int, int]] = []
-        self._peer_ctls: Dict[str, shared_memory.SharedMemory] = {}
+        self._mem: Dict[int, Tuple[memoryview, bool, bool, Optional[int]]] = {}  #: guarded-by _lock
+        self._allocs: List[Tuple[str, shared_memory.SharedMemory, int, int]] = []  #: guarded-by _lock
+        self._peer_ctls: Dict[str, shared_memory.SharedMemory] = {}  #: guarded-by _lock
         self._finalized = False
 
         with _PROCESS_LOCK:
@@ -354,8 +354,11 @@ class SMPlugin(NAPlugin):
     def _peer_ctl(self, uri: str) -> memoryview:
         if uri == self._uri:
             return self._ctl.buf
-        shm = self._peer_ctls.get(uri)
+        with self._lock:
+            shm = self._peer_ctls.get(uri)
         if shm is None:
+            # attach outside the lock (filesystem work), then publish with a
+            # double-check: the loser of a concurrent attach closes its copy
             try:
                 shm = _attach(f"mjrp-ct-{_digest(uri)}")
             except FileNotFoundError:
@@ -363,7 +366,11 @@ class SMPlugin(NAPlugin):
             if struct.unpack_from("<I", shm.buf, 0)[0] != CTL_MAGIC:
                 shm.close()
                 raise MercuryError(Ret.PROTOCOL_ERROR, f"bad sm segment: {uri}")
-            self._peer_ctls[uri] = shm
+            with self._lock:
+                winner = self._peer_ctls.setdefault(uri, shm)
+            if winner is not shm:
+                _close_seg(shm)
+                shm = winner
         return shm.buf
 
     # -- cross-thread posting -------------------------------------------------
@@ -503,7 +510,8 @@ class SMPlugin(NAPlugin):
         _close_seg(conn.shm, unlink=conn.owner)
         for k in [k for k, c in self._conns.items() if c is conn]:
             del self._conns[k]
-        stale_ctl = self._peer_ctls.pop(conn.peer_uri, None)
+        with self._lock:
+            stale_ctl = self._peer_ctls.pop(conn.peer_uri, None)
         if stale_ctl is not None:
             _close_seg(stale_ctl)
 
@@ -833,7 +841,15 @@ class SMPlugin(NAPlugin):
         with _PROCESS_LOCK:
             _PROCESS.pop(self._uri, None)
         self.interrupt()
-        for conn in self._conns.values():
+        with self._tx_lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        with self._lock:
+            peer_ctls = list(self._peer_ctls.values())
+            self._peer_ctls.clear()
+            allocs = list(self._allocs)
+            self._allocs.clear()
+        for conn in conns:
             conn.closed = True
             try:
                 os.close(conn.bell_fd)
@@ -842,9 +858,9 @@ class SMPlugin(NAPlugin):
             conn.tx.release()
             conn.rx.release()
             _close_seg(conn.shm, unlink=conn.owner)
-        for shm in self._peer_ctls.values():
+        for shm in peer_ctls:
             _close_seg(shm)
-        for _name, seg, _base, _size in self._allocs:
+        for _name, seg, _base, _size in allocs:
             _close_seg(seg, unlink=True)
         try:
             self._sel.close()

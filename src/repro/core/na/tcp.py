@@ -118,7 +118,7 @@ class TCPPlugin(NAPlugin):
         self._in_unexpected: Deque[Tuple[str, int, memoryview]] = deque()
         self._recv_expected: List[Tuple[NAOp, Optional[str], int, NACallback]] = []
         self._in_expected: Deque[Tuple[str, int, memoryview]] = deque()
-        self._mem: Dict[int, Tuple[memoryview, bool, bool]] = {}
+        self._mem: Dict[int, Tuple[memoryview, bool, bool]] = {}  #: guarded-by _lock
         self._rma_pending: Dict[int, Tuple[NAOp, NACallback, NAMemHandle, int]] = {}
         self._rma_token = _Counter()
         self._completions: Deque[Tuple[NAOp, NACallback, Tuple]] = deque()

@@ -25,11 +25,11 @@ class Context:
 
     def __init__(self, na: NAPlugin):
         self.na = na
-        self._cq: Deque[Tuple[Callback, CallbackInfo]] = deque()
+        self._cq: Deque[Tuple[Callback, CallbackInfo]] = deque()  #: guarded-by _cq_lock,_cq_cv
         self._cq_lock = threading.Lock()
         self._cq_cv = threading.Condition(self._cq_lock)
         # deadline-tracked operations: (deadline, cancel_fn) — checked in progress
-        self._deadlines: list = []
+        self._deadlines: list = []  #: guarded-by _deadline_lock
         self._deadline_lock = threading.Lock()
 
     # -- completion queue ----------------------------------------------------

@@ -42,7 +42,7 @@ from ..telemetry import trace as _trace
 # An origin forwarding to one of these URIs hands the request/response
 # *values* across directly — no proc encode/decode, no header round trip —
 # while keeping identical Ret/cancel/deadline semantics.
-_LOCAL_DISPATCH: Dict[str, "HGClass"] = {}
+_LOCAL_DISPATCH: Dict[str, "HGClass"] = {}  #: guarded-by _LOCAL_LOCK
 _LOCAL_LOCK = threading.Lock()
 
 
@@ -94,7 +94,7 @@ class Handle:
         self._deadline_entry: Optional[dict] = None
         self._recv_op = None
         self._complete: Optional[Callable[..., None]] = None
-        self._completed = False
+        self._completed = False  #: guarded-by _lock
         # target side, self-tier fast path: set by the origin's
         # _forward_local so respond() hands the output value straight back
         # (no encode / expected-message send)

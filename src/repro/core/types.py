@@ -213,7 +213,7 @@ class _Counter:
     """Monotonic thread-safe u64 counter (cookies, op ids, mem keys)."""
 
     def __init__(self, start: int = 1):
-        self._v = start
+        self._v = start  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def next(self) -> int:

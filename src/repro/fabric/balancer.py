@@ -49,7 +49,7 @@ class Balancer(abc.ABC):
 
 class RoundRobin(Balancer):
     def __init__(self):
-        self._counter = itertools.count()
+        self._counter = itertools.count()  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def rank(self, replicas):
@@ -85,7 +85,7 @@ def _rotate_ties(ordered: List["Replica"], keyfn, n: int) -> List["Replica"]:
 
 class LeastLoaded(Balancer):
     def __init__(self):
-        self._counter = itertools.count()
+        self._counter = itertools.count()  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def rank(self, replicas):
@@ -102,7 +102,7 @@ class LocalityAware(Balancer):
     naturally sinks in the ranking because its resolved tier rose."""
 
     def __init__(self):
-        self._counter = itertools.count()
+        self._counter = itertools.count()  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def rank(self, replicas):
@@ -122,7 +122,7 @@ class EwmaWeighted(Balancer):
     new/recovered replicas get probed instead of starved."""
 
     def __init__(self):
-        self._counter = itertools.count()
+        self._counter = itertools.count()  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def rank(self, replicas):

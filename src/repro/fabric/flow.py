@@ -64,20 +64,21 @@ class CreditGate:
     def __init__(self, credits: int):
         if credits < 1:
             raise ValueError(f"credits must be >= 1, got {credits}")
-        self._limit = float(credits)
-        self._inflight = 0
-        self._waiting = 0
+        self._limit = float(credits)  #: guarded-by _cv
+        self._inflight = 0  #: guarded-by _cv
+        self._waiting = 0  #: guarded-by _cv
         self._cv = threading.Condition()
         # cumulative counters for pool stats
-        self.acquired_total = 0
-        self.released_total = 0
-        self.backpressured_total = 0   # acquires that had to wait
-        self.rejected_total = 0        # acquires that timed out
+        self.acquired_total = 0  #: guarded-by _cv
+        self.released_total = 0  #: guarded-by _cv
+        self.backpressured_total = 0  #: guarded-by _cv
+        self.rejected_total = 0  #: guarded-by _cv
 
     @property
     def credits(self) -> int:
         """The current integer credit limit."""
-        return int(self._limit)
+        with self._cv:
+            return int(self._limit)
 
     # -- acquire / release ---------------------------------------------------
     def try_acquire(self) -> bool:
@@ -149,8 +150,9 @@ class CreditGate:
                     "rejected": self.rejected_total}
 
     def __repr__(self):
-        return (f"<{type(self).__name__} {self._inflight}"
-                f"/{int(self._limit)} in flight>")
+        with self._cv:
+            return (f"<{type(self).__name__} {self._inflight}"
+                    f"/{int(self._limit)} in flight>")
 
 
 class AdaptiveCreditGate(CreditGate):
@@ -180,14 +182,14 @@ class AdaptiveCreditGate(CreditGate):
         self.gain = gain
         self.decrease = decrease
         self.ewma_alpha = ewma_alpha
-        self.ema = 0.0                 # EWMA completion latency (s)
-        self.base: Optional[float] = None   # decaying-min latency floor
-        self.grown_total = 0
-        self.shrunk_total = 0
-        self._last_shrink = 0.0
+        self.ema = 0.0  #: guarded-by _cv       (EWMA completion latency, s)
+        self.base: Optional[float] = None  #: guarded-by _cv (decaying-min floor)
+        self.grown_total = 0  #: guarded-by _cv
+        self.shrunk_total = 0  #: guarded-by _cv
+        self._last_shrink = 0.0  #: guarded-by _cv
 
     # -- control law ---------------------------------------------------------
-    def _target(self) -> Optional[float]:
+    def _target_locked(self) -> Optional[float]:
         if self.target_latency is not None:
             return self.target_latency
         return None if self.base is None else self.base * self.headroom
@@ -205,7 +207,7 @@ class AdaptiveCreditGate(CreditGate):
             # a permanently-degraded replica re-learns its baseline
             self.base = dt if self.base is None else \
                 min(dt, self.base + 0.02 * max(dt - self.base, 0.0))
-            target = self._target()
+            target = self._target_locked()
             if target is None:
                 return
             if self.ema <= target:
@@ -243,7 +245,7 @@ class AdaptiveCreditGate(CreditGate):
     def stats(self) -> Dict[str, int]:
         out = super().stats()
         with self._cv:
-            target = self._target()
+            target = self._target_locked()
             out.update(limit=round(self._limit, 2),
                        min_credits=self.min_credits,
                        max_credits=self.max_credits,

@@ -123,20 +123,28 @@ class Replica:
         self.capacity = capacity
         self.load = load
         self.gate = gate
-        self.bad_schemes: set = set()      # demoted tiers (this pool only)
-        self.addr = None                   # resolved NAAddress
-        self.resolved_uri: Optional[str] = None
-        self.down_until = 0.0              # mark-down after hard failures
-        self.calls = 0
-        self.errors = 0
-        self.ema_latency = 0.0
+        self.bad_schemes: set = set()  #: guarded-by _lock
+        self.addr = None  #: guarded-by _lock
+        self.resolved_uri: Optional[str] = None  #: guarded-by _lock
+        self.down_until = 0.0  #: guarded-by _lock
+        self.calls = 0  #: guarded-by _lock
+        self.errors = 0  #: guarded-by _lock
+        self.ema_latency = 0.0  #: guarded-by _lock
         # reentrant: demote/reresolve re-enter resolve() under the lock
         self._lock = threading.RLock()
 
     @property
     def tier(self) -> int:
-        u = self.resolved_uri
+        with self._lock:
+            u = self.resolved_uri
         return SCHEME_TIERS.get(_scheme(u), 99) if u else 99
+
+    def route(self) -> tuple:
+        """Consistent (addr, resolved_uri) snapshot — a demote/reresolve
+        racing an unlocked pair of reads could hand back the address of
+        one tier labelled with the URI of another."""
+        with self._lock:
+            return self.addr, self.resolved_uri
 
     def resolve(self, engine: Engine) -> bool:
         """Resolve the cheapest non-demoted tier; False if unreachable."""
@@ -203,12 +211,13 @@ class Replica:
             self.gate.record_failure()
 
     def stat(self) -> dict:
-        return {"iid": self.iid, "uri": self.resolved_uri,
-                "tier": _scheme(self.resolved_uri or "?"),
-                "capacity": self.capacity, "load": self.load,
-                "calls": self.calls, "errors": self.errors,
-                "ema_latency_ms": self.ema_latency * 1e3,
-                "up": self.is_up, **self.gate.stats()}
+        with self._lock:
+            return {"iid": self.iid, "uri": self.resolved_uri,
+                    "tier": _scheme(self.resolved_uri or "?"),
+                    "capacity": self.capacity, "load": self.load,
+                    "calls": self.calls, "errors": self.errors,
+                    "ema_latency_ms": self.ema_latency * 1e3,
+                    "up": self.is_up, **self.gate.stats()}
 
 
 class ServicePool:
@@ -258,11 +267,11 @@ class ServicePool:
         self.load_refresh_interval = load_refresh_interval
         self.default_timeout = default_timeout
         self.down_ttl = down_ttl
-        self._view: Dict[str, Replica] = {}
-        self._view_epoch = -1
-        self._view_nonce: Optional[str] = None
-        self._next_epoch_check = 0.0
-        self._next_load_refresh = 0.0
+        self._view: Dict[str, Replica] = {}  #: guarded-by _view_lock
+        self._view_epoch = -1  #: guarded-by _view_lock
+        self._view_nonce: Optional[str] = None  #: guarded-by _view_lock
+        self._next_epoch_check = 0.0  #: guarded-by _view_lock
+        self._next_load_refresh = 0.0  #: guarded-by _view_lock
         self._view_lock = threading.Lock()
         self.refresh(force=True)
 
@@ -285,11 +294,12 @@ class ServicePool:
                 return
             self._next_epoch_check = now + self.refresh_interval
             load_due = now >= self._next_load_refresh
+            have_epoch, have_nonce = self._view_epoch, self._view_nonce
         try:
             if not force and not load_due:
                 # cheap poll first; resolve only when something moved
                 epoch, nonce = self.registry.epoch_info()
-                if epoch == self._view_epoch and nonce == self._view_nonce:
+                if epoch == have_epoch and nonce == have_nonce:
                     return
             # forced refreshes (retry/failover paths) must see the
             # authority — bypass the read cache but still singleflight
@@ -331,12 +341,13 @@ class ServicePool:
             self._view_nonce = nonce
         # unreachable-at-creation replicas get another chance each refresh
         for rep in fresh.values():
-            if rep.addr is None:
+            if rep.route()[0] is None:
                 rep.reresolve(self.engine)
 
     @property
     def epoch(self) -> int:
-        return self._view_epoch
+        with self._view_lock:
+            return self._view_epoch
 
     def replicas(self) -> List[Replica]:
         with self._view_lock:
@@ -502,14 +513,15 @@ class ServicePool:
         _M_ATTEMPTS.inc()
         if hedge:
             _M_HEDGES.inc()
+        addr, uri = rep.route()
         span = _trace.start_span(f"attempt.{rpc}", state.get("tctx"))
         if span.recorded:
-            span.annotate(iid=rep.iid, uri=rep.resolved_uri or "?",
+            span.annotate(iid=rep.iid, uri=uri or "?",
                           n=state["issued"], hedge=hedge,
                           admit_ms=round(admit_ms, 3))
         try:
             with _trace.use(span.ctx):
-                fut = self.engine.call_async(rep.addr, rpc, arg,
+                fut = self.engine.call_async(addr, rpc, arg,
                                              deadline=attempt_deadline)
         except BaseException as e:
             rep.gate.release()        # sync failure (e.g. MSGSIZE)
@@ -622,14 +634,14 @@ class ServicePool:
                 continue
             try:
                 out[rep.iid] = self.engine.call(
-                    rep.addr, rpc, arg,
+                    rep.route()[0], rpc, arg,
                     timeout=timeout or self.default_timeout)
             except Exception as e:        # noqa: BLE001 — broadcast survey
                 out[rep.iid] = e
         return out
 
     def stats(self) -> dict:
-        return {"service": self.service, "epoch": self._view_epoch,
+        return {"service": self.service, "epoch": self.epoch,
                 "balancer": self.balancer.name,
                 "replicas": [r.stat() for r in self.replicas()]}
 

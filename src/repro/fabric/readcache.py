@@ -69,13 +69,13 @@ class ReadCache:
         self.ttl = ttl
         self.max_entries = max_entries
         self._lock = threading.Lock()
-        self._token: Token = (None, -1)
+        self._token: Token = (None, -1)  #: guarded-by _lock
         # key -> (token, expires_at, value)
-        self._entries: Dict[bytes, Tuple[Token, float, Any]] = {}
-        self._inflight: Dict[bytes, Future] = {}
-        self._hits = 0
-        self._misses = 0
-        self._evictions = 0
+        self._entries: Dict[bytes, Tuple[Token, float, Any]] = {}  #: guarded-by _lock
+        self._inflight: Dict[bytes, Future] = {}  #: guarded-by _lock
+        self._hits = 0  #: guarded-by _lock
+        self._misses = 0  #: guarded-by _lock
+        self._evictions = 0  #: guarded-by _lock
 
     # -- invalidation --------------------------------------------------------
     def observe(self, nonce: Optional[str], epoch: int) -> bool:
@@ -145,12 +145,12 @@ class ReadCache:
                     owner = True
                 else:
                     owner = False
+                token = self._token
             if not owner:
                 # another thread is fetching this key: ride its result.
                 # Its failure propagates here too — both callers see the
                 # same error, neither caches it.
                 return fut.result()
-            token = self._token
             try:
                 value = fetch()
             except BaseException as e:

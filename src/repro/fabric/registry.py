@@ -107,7 +107,7 @@ class RegistryService:
         self.table = self.core.table("instances", ttl=instance_ttl)
         # member ids whose expiry still awaits reaping (follower-hosted
         # MembershipServer; see _members_expired) -> forget-after stamp
-        self._pending_reaps: Dict[str, float] = {}
+        self._pending_reaps: Dict[str, float] = {}  #: guarded-by core._lock
         self.core.add_tick_hook(self._apply_pending_reaps)
         self.membership = None
         if serve_membership:
@@ -151,11 +151,13 @@ class RegistryService:
 
     @property
     def epoch(self) -> int:
-        return self.table.epoch
+        with self.core._lock:             # the table shares the core lock
+            return self.table.epoch
 
     @property
     def nonce(self) -> str:
-        return self.core.nonce
+        with self.core._lock:
+            return self.core.nonce
 
     # -- handlers ------------------------------------------------------------
     def _register(self, req):

@@ -114,11 +114,11 @@ class PeerTracker:
         # optimistic start: assume everyone is alive until a full lease
         # passes without contact (prevents takeover storms at boot)
         self._last_heard: Dict[str, float] = {
-            u: now for u in peers if u != self_uri}
+            u: now for u in peers if u != self_uri}  #: guarded-by _lock
         # boot grace: do not self-elect until we either adopted a
         # snapshot from an acting leader or waited one lease out
-        self._boot_until = now + lease_ttl
-        self._synced = False
+        self._boot_until = now + lease_ttl  #: guarded-by _lock
+        self._synced = False  #: guarded-by _lock
         self._lock = threading.Lock()
 
     # -- liveness ------------------------------------------------------------
@@ -215,12 +215,12 @@ class ReplicatedTable:
         self.ttl = ttl
         self.tombstone_ttl = tombstone_ttl
         self._dirty_cb = dirty_cb or (lambda: None)
-        self.entries: Dict[str, dict] = {}
-        self.vers: Dict[str, int] = {}
-        self.epoch = 0                     # version counter
-        self._tombs: Dict[str, Tuple[int, float]] = {}  # key -> (ver, drop)
-        self._horizon = 0                  # newest GC'd deletion version
-        self._soft_dirty: set = set()
+        self.entries: Dict[str, dict] = {}  #: guarded-by _lock
+        self.vers: Dict[str, int] = {}  #: guarded-by _lock
+        self.epoch = 0  #: guarded-by _lock  (version counter)
+        self._tombs: Dict[str, Tuple[int, float]] = {}  #: guarded-by _lock
+        self._horizon = 0  #: guarded-by _lock  (newest GC'd deletion ver)
+        self._soft_dirty: set = set()  #: guarded-by _lock
         self._expire_cbs: List[Callable[[List[str]], None]] = []
 
     # -- reads ---------------------------------------------------------------
@@ -361,6 +361,7 @@ class ReplicatedTable:
             self._horizon = self.epoch
             self._soft_dirty.clear()
 
+    #: requires _lock
     def _gc_tombs(self, now: float) -> None:
         dead = [k for k, (_, drop) in self._tombs.items() if drop <= now]
         for k in dead:
@@ -475,18 +476,18 @@ class ReplicationCore:
         self.delta_gossip = delta_gossip
         self.gossip_interval = gossip_interval
         self._lock = threading.RLock()
-        self.tables: Dict[str, ReplicatedTable] = {}
+        self.tables: Dict[str, ReplicatedTable] = {}  #: guarded-by _lock
         # stream nonce: epochs are only comparable within one nonce (a
         # restarted node restarts at epoch 0 and a failed-over leader
         # starts a fresh stream — see DESIGN.md §8)
-        self.nonce = uuid.uuid4().hex[:12]
+        self.nonce = uuid.uuid4().hex[:12]  #: guarded-by _lock
         self._stop = threading.Event()
         self._dirty = threading.Event()   # membership moved: push now
         self._tick_hooks: List[Callable[[], None]] = []
         # per-peer replication ack: peer -> {"nonce", "epochs"}
-        self._acks: Dict[str, dict] = {}
-        self._next_snap_push: Dict[str, float] = {}
-        self.stats: Dict[str, int] = {
+        self._acks: Dict[str, dict] = {}  #: guarded-by _lock
+        self._next_snap_push: Dict[str, float] = {}  #: guarded-by _lock
+        self.stats: Dict[str, int] = {  #: guarded-by _lock
             "rounds": 0, "delta_pushes": 0, "delta_bytes": 0,
             "snapshot_pushes": 0, "snapshot_bytes": 0,
             "heartbeat_pushes": 0, "heartbeat_bytes": 0,
@@ -508,7 +509,7 @@ class ReplicationCore:
             self.tracker: Optional[PeerTracker] = PeerTracker(
                 peer_list, su, lease_ttl=lease_ttl)
             self.self_uri = su
-            self._leading = False         # elected by the gossip loop
+            self._leading = False  #: guarded-by _lock (elected by gossip)
         else:
             self.tracker = None
             self.self_uri = engine.uri
@@ -523,7 +524,7 @@ class ReplicationCore:
         # delta mode's per-peer rate limit for unacked (dead or cold)
         # peers
         self._full_push_every = max(1.0, gossip_interval)
-        self._next_full_push = 0.0
+        self._next_full_push = 0.0  #: guarded-by _lock
         self._sweep_interval = sweep_interval
         self._sweeper = threading.Thread(
             target=self._sweep_loop, args=(sweep_interval,), daemon=True,
@@ -579,7 +580,8 @@ class ReplicationCore:
     # -- leadership ----------------------------------------------------------
     @property
     def is_leader(self) -> bool:
-        return self._leading
+        with self._lock:
+            return self._leading
 
     def leader_for_writes(self) -> Optional[str]:
         """None if this replica may apply writes locally; otherwise the
@@ -587,7 +589,7 @@ class ReplicationCore:
         unsettled (boot grace / takeover pending) — retryable:
         :class:`QuorumCaller` keeps re-probing the quorum within its own
         timeout budget until the lease settles."""
-        if self.tracker is None or self._leading:
+        if self.tracker is None or self.is_leader:
             return None
         lead = self.tracker.leader_uri()
         if lead is None or lead == self.self_uri:
@@ -831,7 +833,7 @@ class ReplicationCore:
         # restarted rank-0 replica could seize the lease with an empty
         # table before it resynced.
         if (self.tracker.leader_uri() == self.self_uri
-                and not self._leading):
+                and not self.is_leader):
             self._take_over()
             dirty = True
         for hook in self._tick_hooks:
@@ -879,8 +881,8 @@ class ReplicationCore:
                 self._adopt_snapshot(peer, resp["nonce"], resp["snapshot"])
             if resp.get("delta") is not None:
                 self._apply_deltas(peer, resp["nonce"], resp["delta"])
-            if self._leading:
-                with self._lock:
+            with self._lock:
+                if self._leading:
                     self._acks[peer] = {
                         "nonce": resp.get("nonce"),
                         "epochs": dict(resp.get("epochs") or {})}
@@ -888,11 +890,11 @@ class ReplicationCore:
     # -- sweeping ------------------------------------------------------------
     def _sweep_loop(self, interval: float) -> None:
         while not self._stop.wait(interval):
-            if not self._leading:
-                continue                  # followers mirror; only the
-            now = time.monotonic()        # leaseholder expires entries
+            now = time.monotonic()
             with self._lock:
-                tables = list(self.tables.values())
+                if not self._leading:
+                    continue              # followers mirror; only the
+                tables = list(self.tables.values())  # leaseholder expires
             for t in tables:
                 dead = t.expire(now)
                 if dead:
@@ -909,10 +911,11 @@ class ReplicationCore:
                                for n, t in self.tables.items()},
                     "gossip": dict(self.stats)}
             acks = {p: dict(a) for p, a in self._acks.items()}
+            leading = self._leading
         if self.tracker is None:
             return dict(base, role="single", leader=self.self_uri,
                         peers=[])
-        role = ("leader" if self._leading
+        role = ("leader" if leading
                 else "booting" if self.tracker.in_grace() else "follower")
         peers = []
         for p in self.tracker.peer_stats():

@@ -421,13 +421,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     if variant:
         rec["variant"] = variant
         rec["overrides"] = {k: str(v) for k, v in (overrides or {}).items()}
-    t0 = time.time()
+    t0 = time.monotonic()
     with mesh:
         lowered, meta = lower_cell(arch, shape_name, mesh,
                                    overrides=overrides)
         rec.update(meta)
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["compile_s"] = round(time.monotonic() - t0, 1)
         mem = compiled.memory_analysis()
         rec["memory"] = {
             k: int(getattr(mem, k))

@@ -80,7 +80,7 @@ def main(argv=None):
     if args.demo:
         rng = np.random.default_rng(0)
         with Engine("tcp://127.0.0.1:0") as client:
-            t0 = time.time()
+            t0 = time.monotonic()
             rids = []
             for i in range(6):
                 prompt = rng.integers(1, cfg.vocab, size=5 + i).tolist()
@@ -93,7 +93,7 @@ def main(argv=None):
                                   timeout=120.0)
                 print(f"rid {r['rid']}: {out['tokens']}")
             print("stats:", client.call(server.uri, "gen.stats", {}),
-                  f"({time.time() - t0:.1f}s)")
+                  f"({time.monotonic() - t0:.1f}s)")
         gw.stop()
         server.shutdown()
     else:

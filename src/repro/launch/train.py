@@ -92,7 +92,7 @@ def main(argv=None):
                                       impl="xla"))
 
     # --- loop ---------------------------------------------------------------
-    t0 = time.time()
+    t0 = time.monotonic()
     pending_save = None
     for step in range(start_step, start_step + args.steps):
         raw = feed.get(step)
@@ -114,7 +114,7 @@ def main(argv=None):
               f"lr={float(metrics['lr']):.2e}")
     if pending_save is not None:
         print("final checkpoint:", pending_save.result(timeout=120))
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = args.steps * args.batch * args.seq
     print(f"{args.steps} steps, {toks} tokens, {dt:.1f}s "
           f"({toks / dt:.0f} tok/s); checkpoints: {ckpt.list()}")

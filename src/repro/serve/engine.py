@@ -46,7 +46,7 @@ class Request:
     # EWMA (slot occupancy, admit→done) from this, keeping queue wait
     # out of the shedding estimate
     t_admit: float = 0.0
-    _done_cbs: List[Callable[[], None]] = field(default_factory=list)
+    _done_cbs: List[Callable[[], None]] = field(default_factory=list)  #: guarded-by _cb_lock
     _cb_lock: threading.Lock = field(default_factory=threading.Lock)
 
     def add_done_callback(self, cb: Callable[[], None]) -> None:
@@ -86,7 +86,7 @@ class ServeEngine:
         # set on submit: idle step loops wait on this instead of polling
         self.work = threading.Event()
         self._rng = jax.random.PRNGKey(seed)
-        self._rid = 0
+        self._rid = 0  #: guarded-by _lock
         self._lock = threading.Lock()
 
         self._prefill_jit = jax.jit(

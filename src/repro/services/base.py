@@ -131,11 +131,11 @@ class AdmissionController:
         self.ewma_alpha = ewma_alpha
         self.min_samples = min_samples
         self.safety = safety      # >1.0 sheds earlier, <1.0 later
-        self.ema_service = 0.0    # seconds per request, slot-occupancy only
-        self.ema_turnaround = 0.0  # submit→done, queue wait included
-        self.samples = 0
-        self.admitted = 0
-        self.shed = 0
+        self.ema_service = 0.0  #: guarded-by _lock (s/request, occupancy)
+        self.ema_turnaround = 0.0  #: guarded-by _lock (submit→done)
+        self.samples = 0  #: guarded-by _lock
+        self.admitted = 0  #: guarded-by _lock
+        self.shed = 0  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def observe(self, service_s: float,

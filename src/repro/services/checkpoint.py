@@ -41,7 +41,7 @@ class CheckpointServer:
     def __init__(self, engine: Engine, registry: Optional[str] = None,
                  service: str = "ckpt"):
         self.engine = engine
-        self.store: Dict[Tuple[str, int], dict] = {}   # (name, step) -> entry
+        self.store: Dict[Tuple[str, int], dict] = {}  #: guarded-by _lock
         self._lock = threading.Lock()
         engine.register("ckpt.put", self._put)
         engine.register("ckpt.get", self._get)
@@ -52,7 +52,11 @@ class CheckpointServer:
             from ..fabric.registry import ServiceInstance
             self.instance = ServiceInstance(
                 engine, registry, service,
-                load_fn=lambda: float(len(self.store)))
+                load_fn=lambda: float(self._count()))
+
+    def _count(self) -> int:
+        with self._lock:
+            return len(self.store)
 
     def close(self) -> None:
         if self.instance is not None:

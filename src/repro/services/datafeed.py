@@ -33,7 +33,7 @@ class DataFeedServer:
         self.engine = engine
         self.source = source                     # needs .batch_at(step)
         self.eager_limit = eager_limit
-        self._exposed = collections.OrderedDict()  # step -> (named, handle)
+        self._exposed = collections.OrderedDict()  #: guarded-by _lock
         self._keep = keep
         self._lock = threading.Lock()
         engine.register("feed.get", self._get)

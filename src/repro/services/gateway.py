@@ -70,10 +70,10 @@ class ServingGateway:
         self.engine = engine
         self.serve = serve
         self.service = service
-        self.requests: Dict[int, Request] = {}
+        self.requests: Dict[int, Request] = {}  #: guarded-by _lock
         self._lock = threading.Lock()
         self._stop = threading.Event()
-        self.steps = 0
+        self.steps = 0  #: guarded-by _lock
         self.admission = admission or AdmissionController()
         self.shed_enabled = shed_enabled
         engine.register("gen.submit", self._submit, pass_handle=True)
@@ -254,14 +254,18 @@ class ServingGateway:
 
     def _stats(self, _req):
         out = self.serve.stats()
-        out.update(steps=self.steps, uris=self.engine.uri,
+        with self._lock:
+            steps = self.steps
+        out.update(steps=steps, uris=self.engine.uri,
                    load=self._load(), **self.admission.stats())
         return out
 
     def _loop(self):
         while not self._stop.is_set():
             n = self.serve.step()
-            self.steps += 1 if n else 0
+            if n:
+                with self._lock:
+                    self.steps += 1
             if n == 0 and self.serve.queue.empty():
                 # park until the next submit (double-check after clearing
                 # so a racing submit can't be missed; the bounded wait

@@ -35,7 +35,7 @@ class Counter:
 
     def __init__(self, key: str):
         self.key = key
-        self._v = 0
+        self._v = 0  #: guarded-by _lock
         self._lock = threading.Lock()
 
     def inc(self, n: int = 1) -> None:
@@ -44,7 +44,8 @@ class Counter:
 
     @property
     def value(self) -> int:
-        return self._v
+        with self._lock:
+            return self._v
 
 
 class Gauge:
@@ -79,10 +80,10 @@ class Histogram:
     def __init__(self, key: str):
         self.key = key
         self._lock = threading.Lock()
-        self.count = 0
-        self.sum = 0.0
-        self.max = 0.0
-        self.buckets: Dict[int, int] = {}
+        self.count = 0  #: guarded-by _lock
+        self.sum = 0.0  #: guarded-by _lock
+        self.max = 0.0  #: guarded-by _lock
+        self.buckets: Dict[int, int] = {}  #: guarded-by _lock
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -126,9 +127,9 @@ class MetricsRegistry:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._counters: Dict[str, Counter] = {}
-        self._gauges: Dict[str, Gauge] = {}
-        self._histograms: Dict[str, Histogram] = {}
+        self._counters: Dict[str, Counter] = {}  #: guarded-by _lock
+        self._gauges: Dict[str, Gauge] = {}  #: guarded-by _lock
+        self._histograms: Dict[str, Histogram] = {}  #: guarded-by _lock
 
     def counter(self, name: str, **labels: Any) -> Counter:
         key = _key(name, labels)

@@ -8,3 +8,22 @@ sys.path.insert(0, os.path.dirname(__file__))
 # IMPORTANT: the dry-run's 512-device override must never leak into tests;
 # smoke tests and benches see the host's real (1-device) platform.
 os.environ.pop("XLA_FLAGS", None)
+
+# Opt-in lock-order sanitizer (DESIGN.md §11): REPRO_LOCKDEP=1 patches the
+# threading.Lock/RLock/Condition factories *before* any fabric module is
+# imported, so every fabric lock the suite creates is tracked.  The
+# session teardown fails the run on any recorded cycle or lock-held-
+# across-RPC violation.
+from repro.analysis import lockdep as _lockdep  # noqa: E402
+
+if _lockdep.enabled():
+    _lockdep.install()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lockdep_gate():
+    yield
+    if _lockdep.enabled():
+        _lockdep.assert_clean()

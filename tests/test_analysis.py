@@ -1,0 +1,469 @@
+"""fablint + lockdep (DESIGN.md §11).
+
+Static rules are exercised through :meth:`Linter.check_source` with one
+*triggering* and one *passing* fixture per rule; lockdep through private
+:class:`LockGraph` instances (no global factory patching), including the
+classic two-lock inversion and the lock-held-across-RPC case.  The final
+test is the real gate: fablint over ``src/`` must exit 0 against the
+committed baseline.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.analysis import lockdep
+from repro.analysis.lint import (Linter, default_baseline_path,
+                                 load_baseline, main as lint_main)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _violations(source: str, rule: str = None, path: str = "repro/x.py"):
+    out = Linter().check_source(source, path)
+    return [v for v in out if rule is None or v.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# guarded-by
+
+
+GUARDED_BAD = """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._q = []  #: guarded-by _lock
+
+    def broken(self):
+        self._q.append(1)
+"""
+
+GUARDED_OK = GUARDED_BAD.replace(
+    "        self._q.append(1)",
+    "        with self._lock:\n            self._q.append(1)")
+
+
+def test_guarded_by_triggers_and_passes():
+    bad = _violations(GUARDED_BAD, "guarded-by")
+    assert len(bad) == 1 and "_q" in bad[0].msg
+    assert not _violations(GUARDED_OK, "guarded-by")
+
+
+def test_guarded_by_init_exempt():
+    # __init__ publishes before the object is shared: never flagged
+    assert not _violations(GUARDED_BAD, "guarded-by")[0].qualname.endswith(
+        "__init__")
+
+
+def test_requires_annotation_seeds_held_set():
+    src = GUARDED_BAD.replace(
+        "    def broken(self):",
+        "    #: requires _lock\n    def broken(self):")
+    assert not _violations(src, "guarded-by")
+
+
+def test_locked_suffix_seeds_held_set():
+    src = GUARDED_BAD.replace("def broken(", "def broken_locked(")
+    assert not _violations(src, "guarded-by")
+
+
+def test_condition_aliases_its_lock():
+    src = """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._q = []  #: guarded-by _lock
+
+    def ok(self):
+        with self._cv:
+            self._q.append(1)
+"""
+    assert not _violations(src, "guarded-by")
+
+
+def test_inline_suppression():
+    src = GUARDED_BAD.replace(
+        "        self._q.append(1)",
+        "        self._q.append(1)  # fablint: ok[guarded-by] startup only")
+    assert not _violations(src, "guarded-by")
+
+
+# ---------------------------------------------------------------------------
+# lock-blocking
+
+
+def test_blocking_sleep_under_lock():
+    src = """
+import threading, time
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def bad(self):
+        with self._lock:
+            time.sleep(0.1)
+"""
+    vs = _violations(src, "lock-blocking")
+    assert len(vs) == 1 and "sleep" in vs[0].msg
+    assert not _violations(src.replace("            time.sleep(0.1)",
+                                       "            pass"),
+                           "lock-blocking")
+
+
+def test_blocking_rpc_under_lock():
+    src = """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def bad(self, pool):
+        with self._lock:
+            pool.call("svc.rpc", {})
+"""
+    assert _violations(src, "lock-blocking")
+
+
+def test_encode_under_lock_flagged_but_str_encode_ok():
+    src = """
+import threading
+from repro.core import proc as hg_proc
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def bad(self, payload):
+        with self._lock:
+            return hg_proc.encode(hg_proc.proc_any, payload)
+
+    def fine(self):
+        with self._lock:
+            return "x".encode()   # str.encode is not the proc encode
+"""
+    vs = _violations(src, "lock-blocking")
+    assert len(vs) == 1 and vs[0].qualname.endswith("bad")
+
+
+def test_cv_wait_on_held_lock_allowed():
+    src = """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+
+    def ok(self):
+        with self._cv:
+            self._cv.wait(0.1)
+
+    def bad(self, other_event):
+        with self._lock:
+            other_event.wait()
+"""
+    vs = _violations(src, "lock-blocking")
+    assert len(vs) == 1 and vs[0].qualname.endswith("bad")
+
+
+# ---------------------------------------------------------------------------
+# span-finish
+
+
+def test_span_must_finish_on_all_paths():
+    bad = """
+from repro.telemetry import trace as _trace
+
+def handler():
+    span = _trace.start_span("op")
+    do_work()
+"""
+    good = """
+from repro.telemetry import trace as _trace
+
+def handler():
+    span = _trace.start_span("op")
+    try:
+        do_work()
+    finally:
+        span.finish("OK")
+"""
+    assert _violations(bad, "span-finish")
+    assert not _violations(good, "span-finish")
+
+
+def test_span_escaping_is_not_a_leak():
+    src = """
+from repro.telemetry import trace as _trace
+
+def make():
+    span = _trace.start_span("op")
+    return span
+"""
+    assert not _violations(src, "span-finish")
+
+
+# ---------------------------------------------------------------------------
+# wallclock
+
+
+def test_wallclock_banned_monotonic_ok():
+    bad = "import time\n\ndef f():\n    return time.time()\n"
+    good = "import time\n\ndef f():\n    return time.monotonic()\n"
+    assert _violations(bad, "wallclock")
+    assert not _violations(good, "wallclock")
+
+
+# ---------------------------------------------------------------------------
+# thread-hygiene
+
+
+def test_thread_daemon_or_joined():
+    bad = """
+import threading
+
+def run(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+"""
+    daemon = bad.replace("target=fn", "target=fn, daemon=True")
+    joined = bad + "    t.join()\n"
+    assert _violations(bad, "thread-hygiene")
+    assert not _violations(daemon, "thread-hygiene")
+    assert not _violations(joined, "thread-hygiene")
+
+
+# ---------------------------------------------------------------------------
+# metric-cardinality
+
+
+def test_metric_names_literal_and_labels_bounded():
+    bad_name = """
+from repro.telemetry import metrics
+
+def f(name):
+    metrics.counter("prefix." + name).inc()
+"""
+    bad_label = """
+from repro.telemetry import metrics
+
+def f(uri):
+    metrics.counter("fabric.calls", peer=uri.split(":")[0]).inc()
+"""
+    good = """
+from repro.telemetry import metrics
+
+def f(tier):
+    metrics.counter("fabric.calls", tier=tier).inc()
+"""
+    assert _violations(bad_name, "metric-cardinality")
+    assert _violations(bad_label, "metric-cardinality")
+    assert not _violations(good, "metric-cardinality")
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+
+
+def test_baseline_suppresses_and_drift_fails(tmp_path, capsys):
+    # the "repro/" marker makes norm_path yield a stable baseline key
+    pkg = tmp_path / "repro"
+    pkg.mkdir()
+    mod = pkg / "m.py"
+    mod.write_text("import time\n\ndef f():\n    return time.time()\n")
+    base = tmp_path / "baseline.txt"
+    base.write_text("wallclock repro/m.py::f  # display timestamp\n")
+    assert lint_main([str(mod), "--baseline", str(base)]) == 0
+
+    # entry goes stale once the violation is fixed -> drift error
+    mod.write_text("import time\n\ndef f():\n    return time.monotonic()\n")
+    assert lint_main([str(mod), "--baseline", str(base)]) == 1
+    assert "baseline drift" in capsys.readouterr().out
+
+
+def test_committed_baseline_is_small_and_loadable():
+    entries = load_baseline(default_baseline_path())
+    assert len(entries) <= 5
+
+
+# ---------------------------------------------------------------------------
+# lockdep: acquisition-order graph
+
+
+def _mk(graph, name):
+    return lockdep.wrap(threading.Lock(), name, graph)
+
+
+def test_lockdep_two_lock_inversion_is_a_cycle():
+    g = lockdep.LockGraph(metrics=False)
+    a, b = _mk(g, "A"), _mk(g, "B")
+
+    def order_ab():
+        with a:
+            with b:
+                pass
+
+    def order_ba():
+        with b:
+            with a:
+                pass
+
+    t1 = threading.Thread(target=order_ab)
+    t1.start(); t1.join()
+    t2 = threading.Thread(target=order_ba)
+    t2.start(); t2.join()
+
+    rep = g.report()
+    assert rep["cycles"], rep
+    cyc = rep["cycles"][0]["cycle"]
+    assert set(cyc) >= {"A", "B"}
+    with pytest.raises(AssertionError, match="cycle"):
+        g.assert_clean()
+
+
+def test_lockdep_consistent_order_is_clean():
+    g = lockdep.LockGraph(metrics=False)
+    a, b = _mk(g, "A"), _mk(g, "B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    rep = g.report()
+    assert rep["edges"] == 1 and not rep["cycles"]
+    g.assert_clean()
+
+
+def test_lockdep_same_site_nesting_not_a_cycle():
+    # two instances of one class may nest by protocol (peer inboxes):
+    # same-site edges are skipped
+    g = lockdep.LockGraph(metrics=False)
+    a1 = lockdep.wrap(threading.Lock(), "repro/x.py:10", g)
+    a2 = lockdep.wrap(threading.Lock(), "repro/x.py:10", g)
+    with a1:
+        with a2:
+            pass
+    rep = g.report()
+    assert rep["edges"] == 0 and not rep["cycles"]
+
+
+def test_lockdep_reentrant_rlock_no_self_edge():
+    g = lockdep.LockGraph(metrics=False)
+    r = lockdep.wrap(threading.RLock(), "R", g)
+    with r:
+        with r:
+            pass
+    assert not g.report()["cycles"]
+    assert not g.held_sites()
+
+
+def test_lockdep_condition_over_tracked_lock():
+    g = lockdep.LockGraph(metrics=False)
+    lk = lockdep.wrap(threading.Lock(), "CV", g)
+    cv = threading.Condition(lk)
+    hit = []
+
+    def waiter():
+        with cv:
+            while not hit:
+                cv.wait(1.0)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    with cv:
+        hit.append(1)
+        cv.notify_all()
+    t.join(2.0)
+    assert not t.is_alive()
+    assert not g.held_sites()          # wait() dropped it from the stack
+    g.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# lockdep: RPC boundary
+
+
+def test_lockdep_lock_held_across_rpc():
+    g = lockdep.LockGraph(metrics=False)
+    lk = _mk(g, "repro/svc.py:5")
+    with lk:
+        g.note_rpc("Engine.call")
+    rep = g.report()
+    assert rep["rpc_violations"] and \
+        rep["rpc_violations"][0]["held"] == ["repro/svc.py:5"]
+    with pytest.raises(AssertionError, match="RPC boundary"):
+        g.assert_clean()
+
+
+def test_lockdep_rpc_without_lock_is_clean():
+    g = lockdep.LockGraph(metrics=False)
+    lk = _mk(g, "L")
+    with lk:
+        pass
+    g.note_rpc("Engine.call")
+    assert not g.report()["rpc_violations"]
+
+
+# ---------------------------------------------------------------------------
+# lockdep: hold-time metrics
+
+
+def test_lockdep_hold_time_histogram():
+    from repro.telemetry import metrics
+    g = lockdep.LockGraph(metrics=True)
+    lk = lockdep.wrap(threading.Lock(), "repro/hold.py:1", g)
+    with lk:
+        pass
+    key = 'analysis.lock.hold_ms{site=repro/hold.py:1}'
+    snap = metrics.snapshot()["histograms"]
+    assert key in snap and snap[key]["count"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# lockdep: global install (factory patching)
+
+
+def test_lockdep_install_wraps_new_fabric_locks():
+    if lockdep.graph() is not None:
+        # conftest already installed for a REPRO_LOCKDEP=1 run (with the
+        # repro/-only prefix filter) — the suite itself is the coverage
+        pytest.skip("global lockdep active")
+    g = lockdep.install(prefixes=None)          # track every site
+    try:
+        lk = threading.Lock()
+        assert isinstance(lk, lockdep.TrackedLock)
+        with lk:
+            pass
+        assert g.acquisitions >= 1
+    finally:
+        lockdep.uninstall()
+    assert not isinstance(threading.Lock(), lockdep.TrackedLock)
+
+
+def test_lockdep_install_excludes_metrics_registry():
+    if lockdep.graph() is not None:
+        pytest.skip("global lockdep active; factory routing already proven")
+    lockdep.install(prefixes=None)
+    try:
+        from repro.telemetry import metrics
+        h = metrics.REGISTRY.histogram("analysis.selftest.hold_ms")
+        assert not isinstance(h._lock, lockdep.TrackedLock)
+    finally:
+        lockdep.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# the real gate
+
+
+def test_fablint_src_tree_is_clean():
+    rc = lint_main([SRC])
+    assert rc == 0, "fablint found violations in src/ (see stdout)"
