@@ -34,6 +34,7 @@
 from __future__ import annotations
 
 import os
+import random
 import socket
 import statistics
 import subprocess
@@ -1168,6 +1169,232 @@ def bench_trace_overhead(n_workers: int = 2, n_calls: int = 300,
     return out
 
 
+def _reachable(client) -> bool:
+    """True once a registry client's endpoint answers ``fab.epoch``."""
+    try:
+        client.epoch(fresh=True)
+        return True
+    except Exception:  # noqa: BLE001 — readiness probe
+        return False
+
+
+_SHARD_SERVER_SRC = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    from repro.launch import registry
+    registry.main(sys.argv[2:])
+""")
+
+
+def _free_port_base(n: int, tries: int = 32) -> int:
+    """A base port with ``n`` consecutive free TCP ports (the sharded
+    launcher's port-offset convention needs a contiguous range)."""
+    for _ in range(tries):
+        with socket.socket() as probe:
+            probe.bind(("127.0.0.1", 0))
+            base = probe.getsockname()[1]
+        if base + n >= 65536:
+            continue
+        socks = []
+        try:
+            for k in range(n):
+                s = socket.socket()
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                s.bind(("127.0.0.1", base + k))
+                socks.append(s)
+            return base
+        except OSError:
+            continue
+        finally:
+            for s in socks:
+                s.close()
+    raise RuntimeError("no contiguous free port range found")
+
+
+def bench_registry_scale(n_instances: int = 10000, shard_counts=(1, 2, 4),
+                         n_services: int = 64, client_threads: int = 8,
+                         churn_s: float = 3.0, smoke: bool = False) -> Dict:
+    """Control-plane write scaling across registry shards (DESIGN.md §12).
+
+    For each shard count M, M single-node registry shards are spawned as
+    *separate processes* (via ``launch.registry --shards M --shard-index
+    k`` — the honest configuration: each shard quorum is its own
+    leaseholder with its own event loop and its own interpreter).
+    ``client_threads`` writer threads then register ``n_instances``
+    instances across ``n_services`` service names through
+    :class:`~repro.fabric.sharding.ShardedRegistryClient`, followed by a
+    heartbeat-churn window (``fab.report`` load updates plus
+    deregister/re-register cycles) with a sampler measuring resolve
+    latency.  Reported per M: aggregate register and report throughput,
+    p99 resolve latency, error count (must be 0).
+
+    The headline assertion — >=2x aggregate write throughput at 4
+    shards vs 1 — is a *parallel-scaling* claim, so it is enforced only
+    where parallel execution is physically possible (>=4 usable cores,
+    full mode).  Hosts below that still run and report, and the JSON
+    records that the gate was skipped and why.
+    """
+    from repro.fabric.sharding import ShardedRegistryClient
+
+    if smoke:
+        n_instances, shard_counts, churn_s = 1000, (1, 2), 1.5
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    services = [f"svc-{i:03d}" for i in range(n_services)]
+    out: Dict = {"name": "registry_scale", "instances": n_instances,
+                 "services": n_services, "client_threads": client_threads,
+                 "churn_s": churn_s, "points": []}
+
+    for m in shard_counts:
+        base = _free_port_base(m)
+        spec = "|".join(f"tcp://127.0.0.1:{base + k}" for k in range(m))
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", _SHARD_SERVER_SRC, src,
+             "--listen", f"tcp://127.0.0.1:{base}", "--shards", str(m),
+             "--shard-index", str(k), "--instance-ttl", "60",
+             "--no-membership"],
+            stdout=subprocess.DEVNULL, stderr=subprocess.STDOUT)
+            for k in range(m)]
+        cli = Engine("tcp://127.0.0.1:0")
+        try:
+            probe = ShardedRegistryClient(cli, spec, timeout=2.0)
+            for shard_cli in probe.clients:
+                _poll_until(lambda c=shard_cli: _reachable(c), 20.0,
+                            "shard server up", label="registry_scale")
+
+            errors: List[str] = []
+            elock = threading.Lock()
+            regs: List[List[Tuple[str, str]]] = [[] for _ in
+                                                 range(client_threads)]
+            start = threading.Barrier(client_threads + 1)
+
+            def register_slice(t: int):
+                c = ShardedRegistryClient(cli, spec, timeout=5.0)
+                start.wait()
+                for i in range(t, n_instances, client_threads):
+                    svc = services[i % n_services]
+                    try:
+                        iid = c.register(svc, [f"tcp://10.0.0.1:{i}"],
+                                         capacity=4, load=0.0)
+                        regs[t].append((svc, iid))
+                    except Exception as e:  # noqa: BLE001 — tallied
+                        with elock:
+                            errors.append(repr(e))
+
+            threads = [threading.Thread(target=register_slice, args=(t,),
+                                        daemon=True)
+                       for t in range(client_threads)]
+            for t in threads:
+                t.start()
+            start.wait()
+            t0 = time.monotonic()
+            for t in threads:
+                t.join()
+            reg_dt = time.monotonic() - t0
+
+            # churn window: heartbeat load reports + re-register cycles
+            # on every shard while a sampler times live resolves
+            stop = threading.Event()
+            report_n = [0] * client_threads
+
+            def churn(t: int):
+                c = ShardedRegistryClient(cli, spec, timeout=5.0)
+                mine = regs[t]
+                rng = random.Random(t)
+                k = 0
+                while not stop.is_set() and mine:
+                    svc, iid = mine[rng.randrange(len(mine))]
+                    try:
+                        if k % 50 == 49:      # occasional re-register
+                            c.register(svc, [f"tcp://10.0.0.1:{k}"],
+                                       capacity=4, iid=iid)
+                        else:
+                            c.report(svc, iid, rng.random())
+                        report_n[t] += 1
+                    except Exception as e:  # noqa: BLE001 — tallied
+                        with elock:
+                            errors.append(repr(e))
+                    k += 1
+
+            lat_ms: List[float] = []
+
+            def sample():
+                c = ShardedRegistryClient(cli, spec, timeout=5.0)
+                rng = random.Random(10_007)
+                while not stop.is_set():
+                    svc = services[rng.randrange(n_services)]
+                    t1 = time.monotonic()
+                    try:
+                        c.resolve(svc, fresh=True)
+                        lat_ms.append((time.monotonic() - t1) * 1e3)
+                    except Exception as e:  # noqa: BLE001 — tallied
+                        with elock:
+                            errors.append(repr(e))
+
+            churners = [threading.Thread(target=churn, args=(t,),
+                                         daemon=True)
+                        for t in range(client_threads)]
+            sampler = threading.Thread(target=sample, daemon=True)
+            c0 = time.monotonic()
+            for t in churners:
+                t.start()
+            sampler.start()
+            time.sleep(churn_s)
+            stop.set()
+            for t in churners:
+                t.join(timeout=10.0)
+            sampler.join(timeout=10.0)
+            churn_dt = time.monotonic() - c0
+
+            registered = sum(len(r) for r in regs)
+            pt = {"shards": m,
+                  "registered": registered,
+                  "register_rps": registered / reg_dt,
+                  "report_rps": sum(report_n) / churn_dt,
+                  "resolve_p99_ms": (float(np.percentile(lat_ms, 99))
+                                     if lat_ms else None),
+                  "resolve_samples": len(lat_ms),
+                  "errors": len(errors)}
+            out["points"].append(pt)
+            if errors:
+                out.setdefault("error_samples", errors[:5])
+            assert registered == n_instances, \
+                f"registry_scale: {registered}/{n_instances} registered " \
+                f"at {m} shards ({errors[:3]})"
+            assert not errors, \
+                f"registry_scale: {len(errors)} errors at {m} shards " \
+                f"({errors[:3]})"
+        finally:
+            cli.shutdown()
+            for p in procs:
+                p.terminate()
+            for p in procs:
+                try:
+                    p.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+
+    by_m = {pt["shards"]: pt for pt in out["points"]}
+    if 1 in by_m and max(shard_counts) in by_m:
+        hi = max(shard_counts)
+        out["write_speedup_x"] = (by_m[hi]["register_rps"]
+                                  / by_m[1]["register_rps"])
+    cpus = len(os.sched_getaffinity(0)) if hasattr(os, "sched_getaffinity") \
+        else (os.cpu_count() or 1)
+    gate = (not smoke) and 4 in by_m and 1 in by_m and cpus >= 4
+    out["scaling_gate"] = {
+        "cpus": cpus, "asserted": gate,
+        "reason": None if gate else
+        ("smoke mode" if smoke else
+         f"parallel-scaling assert needs >=4 usable cores, have {cpus}")}
+    if gate:
+        assert by_m[4]["register_rps"] >= 2.0 * by_m[1]["register_rps"], \
+            f"registry_scale: 4-shard write throughput " \
+            f"{by_m[4]['register_rps']:.0f}/s is not >=2x the 1-shard " \
+            f"{by_m[1]['register_rps']:.0f}/s"
+    return out
+
+
 def run_all(verbose=True, transports=("self", "sm", "tcp"),
             smoke=False, only=None) -> List[Dict]:
     unknown = [t for t in transports if t not in ("self", "sm", "tcp")]
@@ -1176,7 +1403,7 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                          f"choose from self, sm, tcp")
     known_benches = ("latency", "bandwidth", "rate", "pool", "overload",
                      "registry_failover", "gossip_churn", "cached_resolve",
-                     "trace_overhead")
+                     "trace_overhead", "registry_scale")
     if only:
         bad = [b for b in only if b not in known_benches]
         if bad:
@@ -1190,7 +1417,7 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
         return (name in only if only
                 else name not in ("overload", "registry_failover",
                                   "gossip_churn", "cached_resolve",
-                                  "trace_overhead"))
+                                  "trace_overhead", "registry_scale"))
 
     iters = 50 if smoke else 200
     sizes = (4 << 10, 1 << 20) if smoke else \
@@ -1221,6 +1448,8 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
     if want("trace_overhead"):
         results.append(bench_trace_overhead(
             n_calls=150 if smoke else 450))
+    if want("registry_scale"):
+        results.append(bench_registry_scale(smoke=smoke))
     if verbose:
         lat = next((r for r in results if r["name"] == "rpc_latency"), None)
         if lat is not None:
@@ -1316,6 +1545,26 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                       f"{rs['span_count']} spans, {rs['processes']} "
                       f"processes, {rs['roots']} root, {rs['attempts']} "
                       f"attempts ({rs['canceled']} canceled)")
+            if res["name"] == "registry_scale":
+                print(f"[registry_scale] {res['instances']} instances "
+                      f"across {res['services']} services, "
+                      f"{res['client_threads']} writer threads, "
+                      f"{res['churn_s']:.1f}s churn window:")
+                for pt in res["points"]:
+                    p99 = (f"{pt['resolve_p99_ms']:.1f}ms"
+                           if pt["resolve_p99_ms"] is not None else "n/a")
+                    print(f"   shards={pt['shards']}  register "
+                          f"{pt['register_rps']:7.0f}/s | report "
+                          f"{pt['report_rps']:7.0f}/s | p99 resolve "
+                          f"{p99} ({pt['resolve_samples']} samples) | "
+                          f"errors {pt['errors']}")
+                gate = res["scaling_gate"]
+                if "write_speedup_x" in res:
+                    tail = (f"(>=2x gate asserted, {gate['cpus']} cores)"
+                            if gate["asserted"]
+                            else f"(gate skipped: {gate['reason']})")
+                    print(f"   write speedup "
+                          f"{res['write_speedup_x']:.2f}x {tail}")
             if res["name"] == "routed_pool_overload":
                 print(f"[overload] {res['workers']}x{res['worker_threads']}"
                       f" handlers @ {res['work_ms']:.0f}ms, "
@@ -1347,7 +1596,7 @@ if __name__ == "__main__":
                     help="comma-separated subset of "
                          "latency,bandwidth,rate,pool,overload,"
                          "registry_failover,gossip_churn,cached_resolve,"
-                         "trace_overhead")
+                         "trace_overhead,registry_scale")
     args = ap.parse_args()
     res = run_all(transports=tuple(args.transports.split(",")),
                   smoke=args.smoke,

@@ -20,6 +20,8 @@ from .registry import (RegistryClient, RegistryService, ServiceInstance,
                        resolve_service_uris)
 from .replication import (PeerTracker, QuorumCaller, ReplicatedTable,
                           ReplicationCore, parse_registry_uris)
+from .sharding import (ShardedRegistryClient, membership_home,
+                       parse_shard_spec, registry_client_for, shard_of)
 
 __all__ = [
     "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
@@ -30,4 +32,6 @@ __all__ = [
     "RegistryClient", "ServiceInstance", "resolve_service_uris",
     "PeerTracker", "QuorumCaller", "ReplicatedTable", "ReplicationCore",
     "parse_registry_uris", "ReadCache", "args_digest",
+    "shard_of", "parse_shard_spec", "membership_home",
+    "ShardedRegistryClient", "registry_client_for",
 ]

@@ -65,7 +65,8 @@ from .balancer import Balancer, make_balancer
 from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, NonRetryable,
                      RetryPolicy, call_with_budget)
-from .registry import RegistryClient
+from .registry import RegistryClient  # noqa: F401  (re-exported surface)
+from .sharding import registry_client_for
 
 # errors worth retrying on another replica: the request may never have
 # executed (or the transport lost the answer — or, for OVERLOAD, the
@@ -250,8 +251,12 @@ class ServicePool:
         # every epoch bump or nonce change the client observes evicts.
         if cache_ttl is None:
             cache_ttl = refresh_interval / 2
-        self.registry = RegistryClient(engine, registry_uri, timeout=2.0,
-                                       cache_ttl=cache_ttl)
+        # A sharded spec ('|'-separated shard quorums, DESIGN.md §12)
+        # binds the pool to the one shard that owns this service name —
+        # the epoch-poll/token refresh below is per-shard by design.
+        self.registry = registry_client_for(engine, registry_uri,
+                                            service=service, timeout=2.0,
+                                            cache_ttl=cache_ttl)
         self.balancer = make_balancer(balancer)
         self.policy = policy or RetryPolicy()
         self.credits_per_target = credits_per_target

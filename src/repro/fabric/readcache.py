@@ -179,6 +179,13 @@ class ReadCache:
             return value
 
     # -- observability -------------------------------------------------------
+    def token(self) -> Token:
+        """The current ``(nonce, epoch)`` authority token.  One token
+        per cache instance: sharded clients hold one cache per shard
+        precisely so these never mix (DESIGN.md §12)."""
+        with self._lock:
+            return self._token
+
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self._hits, "misses": self._misses,

@@ -424,9 +424,14 @@ def resolve_service_uris(engine: Engine, registry_uri, service: str,
     semicolon-joined string per instance, registry order).  The thin
     entry point for clients that want name resolution without a full
     :class:`~repro.fabric.pool.ServicePool` (checkpoint/datafeed).
-    ``registry_uri`` may name one registry endpoint or the whole
-    replica set (see :class:`RegistryClient`)."""
-    view = RegistryClient(engine, registry_uri, timeout).resolve(service)
+    ``registry_uri`` may name one registry endpoint, the whole replica
+    set (see :class:`RegistryClient`), or a sharded control plane
+    (``'|'``-separated shard quorums, DESIGN.md §12 — the lookup goes
+    straight to the shard that owns ``service``)."""
+    from .sharding import registry_client_for  # deferred: import cycle
+    client = registry_client_for(engine, registry_uri, service=service,
+                                 timeout=timeout)
+    view = client.resolve(service)
     if not view["instances"]:
         raise MercuryError(Ret.NOENTRY,
                            f"no live instances of service {service!r}")
@@ -453,7 +458,11 @@ class ServiceInstance:
                  report_interval: float = 0.5,
                  member_id: Optional[str] = None,
                  uris: Optional[List[str]] = None):
-        self.client = RegistryClient(engine, registry_uri)
+        from .sharding import registry_client_for  # deferred: import cycle
+        # sharded specs bind the reporter to the owning shard; the
+        # heartbeat/re-register loop below is oblivious to the map
+        self.client = registry_client_for(engine, registry_uri,
+                                          service=service)
         self.service = service
         self.load_fn = load_fn
         self.interval = report_interval

@@ -171,8 +171,12 @@ class MembershipClient:
                  heartbeat_interval: float = 0.5,
                  on_change: Optional[Callable[[dict], None]] = None,
                  cache_ttl: float = 0.0):
+        from ..fabric.sharding import membership_home
         self.engine = engine
-        self._caller = QuorumCaller(engine, server_uri, timeout=5.0)
+        # membership is unsharded and rides shard 0 (DESIGN.md §12), so
+        # a sharded registry spec reduces to its home shard here
+        self._caller = QuorumCaller(engine, membership_home(server_uri),
+                                    timeout=5.0)
         self.member_id = member_id
         self.interval = heartbeat_interval
         self.on_change = on_change

@@ -19,7 +19,42 @@ from repro.analysis import lockdep as _lockdep  # noqa: E402
 if _lockdep.enabled():
     _lockdep.install()
 
+import time  # noqa: E402
+
 import pytest  # noqa: E402
+
+
+def poll_until(pred, timeout: float = 8.0, interval: float = 0.02,
+               msg: str = "condition"):
+    """Deflake helper: poll ``pred`` until truthy, bounded by
+    ``timeout`` (monotonic).  Returns the first truthy value, so tests
+    can both wait for and capture a result.  Use this instead of fixed
+    ``time.sleep`` waits — it converges as fast as the system actually
+    is and fails loudly with ``msg`` instead of silently racing."""
+    deadline = time.monotonic() + timeout
+    while True:
+        value = pred()
+        if value:
+            return value
+        if time.monotonic() >= deadline:
+            raise AssertionError(
+                f"timed out after {timeout:.1f}s waiting for {msg}")
+        time.sleep(interval)
+
+
+def wait_event(event, timeout: float = 8.0, msg: str = "event"):
+    """Deflake helper: bounded ``threading.Event`` wait that fails
+    loudly instead of letting a test limp past an unset event."""
+    if not event.wait(timeout):
+        raise AssertionError(
+            f"timed out after {timeout:.1f}s waiting for {msg}")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-second quorum/chaos tests; deselect with "
+        "-m 'not slow' for a fast local loop")
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -13,6 +13,7 @@ import uuid
 import numpy as np
 import pytest
 
+from conftest import poll_until
 from repro.core.executor import Engine, RemoteError
 from repro.core.types import Ret
 from repro.fabric import (BudgetExhausted, CreditGate, EwmaWeighted,
@@ -72,11 +73,8 @@ def test_registry_ttl_expires_silent_instance(reg):
         cli = RegistryClient(cli_e, reg_e.uri)
         cli.register("svc", "tcp://127.0.0.1:1111")   # never reports again
         e1 = cli.epoch()
-        deadline = time.time() + 5
-        while time.time() < deadline:
-            if not cli.resolve("svc")["instances"]:
-                break
-            time.sleep(0.1)
+        poll_until(lambda: not cli.resolve("svc")["instances"],
+                   timeout=5.0, interval=0.1, msg="silent instance reaped")
         assert cli.resolve("svc")["instances"] == []
         assert cli.epoch() > e1
 
@@ -93,15 +91,14 @@ def test_registry_reaps_instances_of_dead_members(reg):
         iid = cli.register("svc", w.uri, member_id="w1")
         # member w1 never heartbeats; the instance DOES keep reporting,
         # so only the member-expiry path can remove it
-        deadline = time.time() + 5
-        gone = False
-        while time.time() < deadline and not gone:
+        def _reaped():
             try:
                 cli.report("svc", iid, load=0.0)
+                return False
             except RemoteError:
-                gone = True                    # NOENTRY: reaped
-            time.sleep(0.05)
-        assert gone
+                return True                    # NOENTRY: reaped
+        poll_until(_reaped, timeout=5.0, interval=0.05,
+                   msg="member-bound instance reaped")
         assert cli.resolve("svc")["instances"] == []
     ms.close()
 
@@ -270,12 +267,9 @@ def test_pool_failover_on_replica_death(reg):
         # every call still succeeds (retries absorb the dead replica)
         assert all(pool.call("echo", i, timeout=15.0)[0] == "b"
                    for i in range(8))
-        deadline = time.time() + 5
-        while time.time() < deadline:
-            pool.refresh(force=True)
-            if len(pool.replicas()) == 1:
-                break
-            time.sleep(0.1)
+        poll_until(lambda: (pool.refresh(force=True) or
+                            len(pool.replicas()) == 1),
+                   timeout=5.0, interval=0.1, msg="dead replica pruned")
         assert len(pool.replicas()) == 1       # epoch bump pruned the dead
         ib.close()
 
@@ -327,14 +321,13 @@ def test_pool_recovers_replica_after_transient_outage(reg):
         # replica comes back on a NEW port; re-registers under same iid
         srv2 = _echo_engine("a2")
         rc.register("svc", srv2.uri, capacity=4, iid=iid)
-        deadline = time.time() + 5
-        ok = False
-        while time.time() < deadline and not ok:
+        def _recovered():
             try:
-                ok = pool.call("echo", 3, timeout=3.0)[0] == "a2"
+                return pool.call("echo", 3, timeout=3.0)[0] == "a2"
             except Exception:
-                time.sleep(0.1)
-        assert ok                      # recovered, not tombstoned
+                return False
+        poll_until(_recovered, timeout=5.0, interval=0.1,
+                   msg="replica recovery (not tombstoned)")
         srv2.shutdown()
         rc.deregister("svc", iid)
 
@@ -367,6 +360,7 @@ def test_reregister_same_uris_does_not_bump_epoch(reg):
         cli.deregister("svc", iid)
 
 
+@pytest.mark.slow
 def test_pool_survives_registry_restart():
     """Acceptance: a pool keeps routing through a registry kill/restart
     (epoch resets to 0 under a fresh nonce) and converges to the fresh
@@ -402,21 +396,16 @@ def test_pool_survives_registry_restart():
         try:
             # the instance's report loop re-registers itself (NOENTRY ->
             # register); wait for the fresh registry to list it
-            deadline = time.time() + 10
             rc2 = RegistryClient(cli, reg_e2.uri)
-            while time.time() < deadline:
-                if rc2.resolve("svc")["instances"]:
-                    break
-                time.sleep(0.05)
-            assert rc2.resolve("svc")["instances"], "instance never re-registered"
+            poll_until(lambda: rc2.resolve("svc")["instances"],
+                       timeout=10.0, interval=0.05,
+                       msg="instance re-registration on the fresh registry")
             # pool must converge onto the fresh view (new nonce, LOWER
             # epoch) within ~one refresh interval
-            deadline = time.time() + 5
-            while time.time() < deadline and pool._view_nonce == old_nonce:
-                pool.refresh()
-                time.sleep(0.02)
-            assert pool._view_nonce != old_nonce, \
-                "pool stuck on the dead registry's view"
+            poll_until(lambda: (pool.refresh() or
+                                pool._view_nonce != old_nonce),
+                       timeout=5.0, msg="pool resync off the dead "
+                                        "registry's view")
             assert pool.epoch < old_epoch          # reset accepted
             assert pool.call("echo", 3, timeout=10.0)[0] == "a"
         finally:
@@ -425,6 +414,7 @@ def test_pool_survives_registry_restart():
     inst.close(deregister=False)
 
 
+@pytest.mark.slow
 def test_replica_mutators_are_race_free():
     """demote / reresolve / mark_down / record hammered from many
     threads: every transition atomic (the PR-3 locking fix), no replica
@@ -779,15 +769,18 @@ def test_gen_result_wait_is_event_driven():
             Engine("tcp://127.0.0.1:0") as cli:
         gw = ServingGateway(srv, serve)
         rid = cli.call(srv.uri, "gen.submit", {"tokens": [1, 2]})["rid"]
-        deadline = time.time() + 5
-        while not serve.parked and time.time() < deadline:
-            time.sleep(0.01)
+        poll_until(lambda: serve.parked, timeout=5.0, interval=0.01,
+                   msg="request admitted and parked")
         req = serve.parked[0]                  # admitted, unfinished
+        cbs_before = len(req._done_cbs)
         waiters = [cli.call_async(srv.uri, "gen.result",
                                   {"rid": rid, "wait": True,
                                    "timeout": 20.0}, timeout=30.0)
                    for _ in range(4)]          # = srv handler_threads
-        time.sleep(0.2)
+        # each parked waiter registers a done callback; wait until all
+        # four are event-parked (not thread-parked) before probing
+        poll_until(lambda: len(req._done_cbs) >= cbs_before + 4,
+                   timeout=5.0, interval=0.01, msg="waiters parked")
         # old busy/parked design: all 4 pool threads blocked -> this hangs
         stats = cli.call(srv.uri, "gen.stats", {}, timeout=2.0)
         assert stats["n_slots"] == 2

@@ -200,3 +200,40 @@ def test_population_raced_by_observe_does_not_stick():
     f = Counter()
     c.get_or_call("m", {}, f)
     assert f.calls == 1                   # ambiguous result was NOT cached
+
+
+def test_per_shard_tokens_do_not_cross_evict():
+    """Sharded control plane (DESIGN.md §12): a sharded client holds
+    one cache — one ``(nonce, epoch)`` token — per shard, so a restart
+    (nonce change) on shard 1 evicts only shard-1 entries and shard 0
+    keeps serving its cached authority.  Epochs are NEVER comparable
+    across shards: shard 1 restarting onto a *lower* epoch than shard
+    0's must still evict shard 1 (new nonce) and must not touch shard 0
+    (the end-to-end version lives in test_sharding.py)."""
+    shard0, shard1 = ReadCache(ttl=30.0), ReadCache(ttl=30.0)
+    tok = lambda out: (out["nonce"], out["epoch"])  # noqa: E731
+    f0 = Counter({"nonce": "s0-boot", "epoch": 9, "v": "alpha"})
+    f1 = Counter({"nonce": "s1-boot", "epoch": 3, "v": "beta"})
+    assert shard0.get_or_call("fab.resolve", {"service": "alpha"}, f0,
+                              token_of=tok)["v"] == "alpha"
+    assert shard1.get_or_call("fab.resolve", {"service": "beta"}, f1,
+                              token_of=tok)["v"] == "beta"
+    assert shard0.token() == ("s0-boot", 9)
+    assert shard1.token() == ("s1-boot", 3)
+
+    # shard 1 restarts: fresh nonce, epoch counter reset below BOTH
+    # shards' previous epochs — a global token would deadlock or
+    # cross-evict here; per-shard tokens just advance shard 1's
+    assert shard1.observe("s1-reborn", 1)
+    assert len(shard1) == 0 and shard1.token() == ("s1-reborn", 1)
+    assert len(shard0) == 1 and shard0.token() == ("s0-boot", 9)
+
+    # shard 0 still serves from cache (zero new fetches); shard 1
+    # refetches under its reborn authority
+    assert shard0.get_or_call("fab.resolve", {"service": "alpha"}, f0,
+                              token_of=tok)["v"] == "alpha"
+    assert f0.calls == 1
+    f1.value = {"nonce": "s1-reborn", "epoch": 1, "v": "beta'"}
+    assert shard1.get_or_call("fab.resolve", {"service": "beta"}, f1,
+                              token_of=tok)["v"] == "beta'"
+    assert f1.calls == 2
