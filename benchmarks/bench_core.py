@@ -1395,6 +1395,280 @@ def bench_registry_scale(n_instances: int = 10000, shard_counts=(1, 2, 4),
     return out
 
 
+def bench_sm_burst(n_frames: int = 200) -> Dict:
+    """Doorbell coalescing under burst: enqueue ``n_frames`` sm frames
+    while the consumer is *not* progressing, and count FIFO doorbell
+    writes.  The coalesced send path rings only on the ring's idle→busy
+    transition (plus ring-full liveness probes), so a burst must cost
+    O(1) bell syscalls, not one per frame — the ROADMAP item 4 claim.
+    Asserted, not just measured: bells ≤ max(4, frames/10), and every
+    frame still arrives once the consumer drains."""
+    from repro.core.na import SMPlugin
+    tag = uuid.uuid4().hex[:8]
+    a = SMPlugin(f"sm://burst-a-{tag}")
+    b = SMPlugin(f"sm://burst-b-{tag}")
+    out: Dict = {"name": "sm_burst", "frames_sent": n_frames}
+    try:
+        got: List[bytes] = []
+        for _ in range(n_frames):
+            b.msg_recv_unexpected(
+                lambda ret, src, t, data: got.append(bytes(data)))
+        dst = a.addr_lookup(b.addr_self().uri)
+        payload = b"y" * 64
+        t0 = time.perf_counter()
+        for i in range(n_frames):
+            a.msg_send_unexpected(dst, payload, i, lambda ret: None)
+        out["enqueue_us_per_frame"] = \
+            (time.perf_counter() - t0) / n_frames * 1e6
+        frames, bells = a.stat_frames, a.stat_bells
+        deadline = time.monotonic() + 10.0
+        while len(got) < n_frames and time.monotonic() < deadline:
+            b.progress(0.05)
+            a.progress(0.0)            # run send-side completions
+        out.update(frames=frames, bells=bells,
+                   delivered=len(got),
+                   coalesce_x=frames / max(bells, 1))
+        assert len(got) == n_frames, \
+            f"sm_burst: {len(got)}/{n_frames} frames delivered"
+        assert frames == n_frames, \
+            f"sm_burst: counted {frames} tx frames, sent {n_frames}"
+        assert bells <= max(4, n_frames // 10), \
+            f"sm_burst: {bells} doorbell writes for {n_frames} queued " \
+            f"frames — coalescing is not collapsing the burst"
+    finally:
+        a.finalize()
+        b.finalize()
+    return out
+
+
+_SERVE_WORKER_SRC = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    import jax
+    import numpy as np
+    from repro.core.executor import Engine
+    from repro.configs.qwen1_5_0_5b import reduced
+    from repro.models import Model
+    from repro.serve.engine import ServeEngine
+    from repro.services.gateway import ServingGateway
+    uri, registry = sys.argv[2], sys.argv[3]
+    chunk, cap, max_len = int(sys.argv[4]), int(sys.argv[5]), int(sys.argv[6])
+    cfg = reduced()
+    m = Model(cfg)
+    pp = m.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(
+        lambda p: p.value, pp,
+        is_leaf=lambda x: hasattr(x, "value") and hasattr(x, "axes"))
+    serve = ServeEngine(m, params, max_len=max_len, n_slots=4,
+                        chunk_tokens=chunk, session_cap=cap)
+    # compile the chunk/decode/gather/scatter jits before serving (one
+    # warm turn + one session resume) so XLA compile time never lands
+    # inside a measured phase
+    w = serve.generate([np.arange(8, dtype=np.int32)], max_new=2,
+                       session_ids=["warm"])[0]
+    p2 = np.concatenate([np.arange(8), np.asarray(w),
+                         np.zeros(2)]).astype(np.int32)
+    serve.generate([p2], max_new=2, session_ids=["warm"])
+    with Engine(uri) as e:
+        gw = ServingGateway(e, serve, registry=registry, service="gen-sess",
+                            report_interval=0.2, shed_enabled=False)
+        print("URI " + e.uri, flush=True)
+        sys.stdin.read()
+        gw.close()
+""")
+
+
+def bench_serve_session(n_replicas: int = 3, n_conversations: int = 8,
+                        n_turns: int = 6, prompt_len: int = 384,
+                        max_new: int = 2, smoke: bool = False) -> Dict:
+    """Multi-turn serving over a routed pool: session-affine + KV-reuse
+    vs naive re-prefill (tentpole proof for the session-affine data
+    path).
+
+    Both phases run against the SAME chunked-prefill gateways (chunking
+    also bounds XLA recompiles, keeping the comparison honest); the only
+    difference is the naive phase sends no ``session_id`` and routes
+    every turn through the plain balancer, so every follow-up re-prefills
+    its entire history on an arbitrary replica, while the affine phase
+    routes follow-ups to the KV-holding replica and prefills only the
+    suffix.  Asserts ≥2x multi-turn tokens/s, strictly lower follow-up
+    TTFT p99, and — with a replica SIGKILLed mid-conversation — zero
+    lost requests (affinity falls back to a fresh-prefill route)."""
+    import concurrent.futures as cf
+    from contextlib import ExitStack
+
+    from repro.fabric import (RegistryService, RetryPolicy, ServicePool,
+                              SessionAffinity)
+
+    # a multi-turn chat is prefill-heavy by construction: a long shared
+    # history (the part session reuse deletes) and a few new tokens per
+    # turn — mirroring the regime the tentpole targets.  max_new stays
+    # small on purpose: decode steps cost the same in both phases, so
+    # they only dilute the prefill-reuse signal this bench isolates
+    if smoke:
+        n_conversations, n_turns = 6, 5
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    max_len = 512
+    chunk, session_cap = 32, 8
+    out: Dict = {"name": "serve_session", "replicas": n_replicas,
+                 "conversations": n_conversations, "turns": n_turns,
+                 "prompt_len": prompt_len, "max_new": max_new,
+                 "chunk_tokens": chunk, "session_cap": session_cap}
+    rng = random.Random(7)
+
+    def fresh_tokens(n):
+        return [rng.randrange(1, 500) for _ in range(n)]
+
+    with Engine("tcp://127.0.0.1:0") as reg_engine:
+        registry = RegistryService(reg_engine, instance_ttl=3.0)
+        with ExitStack() as stack:
+            procs = []
+            for i in range(n_replicas):
+                p = subprocess.Popen(
+                    [sys.executable, "-c", _SERVE_WORKER_SRC, src,
+                     "tcp://127.0.0.1:0", reg_engine.uri, str(chunk),
+                     str(session_cap), str(max_len)],
+                    stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True)
+
+                def _stop(proc=p):
+                    try:
+                        proc.stdin.close()
+                        proc.wait(timeout=10)
+                    except Exception:
+                        proc.kill()
+                stack.callback(_stop)
+                line = p.stdout.readline().strip()
+                if not line.startswith("URI "):
+                    raise RuntimeError(f"serve worker failed: {line!r}")
+                procs.append(p)
+
+            with Engine("tcp://127.0.0.1:0") as cli:
+                # rr, not least: a turn fans all conversations out at
+                # the same instant, so load-ranked placement is a race
+                # on stale signals — round-robin spreads turn-0 evenly
+                # and the affinity layer keeps follow-ups put
+                # fixed credits: gen.generate intentionally holds a call
+                # open for a full generation, which the adaptive gate's
+                # latency heuristic would misread as congestion and
+                # serialize conversations per replica
+                pool = ServicePool(cli, reg_engine.uri, "gen-sess",
+                                   balancer="rr",
+                                   credits_per_target=8,
+                                   adaptive_credits=False,
+                                   policy=RetryPolicy(attempts=4,
+                                                      rpc_timeout=120.0))
+                pool.call("gen.stats", {}, timeout=30)        # warm view
+
+                def run_phase(affine, tag, extra_turns=0, kill_at=None):
+                    """One full pass of multi-turn conversations; returns
+                    throughput + TTFT stats.  ``kill_at`` SIGKILLs a
+                    replica before that turn index (affine fallback
+                    path)."""
+                    aff = SessionAffinity(pool) if affine else None
+                    hist = [fresh_tokens(prompt_len)
+                            for _ in range(n_conversations)]
+                    ttft_all, ttft_follow = [], []
+                    new_tokens = 0
+                    turns = n_turns + extra_turns
+
+                    def one_turn(ci, t):
+                        sid = f"{tag}-conv{ci}"
+                        arg = {"tokens": hist[ci], "max_new": max_new,
+                               "session_id": sid if affine else None}
+                        if affine:
+                            res, _iid = aff.call_routed(
+                                sid, "gen.generate", arg, timeout=180)
+                        else:
+                            res = pool.call("gen.generate", arg,
+                                            timeout=180)
+                        return ci, res
+
+                    t0 = time.perf_counter()
+                    for t in range(turns):
+                        if kill_at is not None and t == kill_at:
+                            procs[0].kill()   # replica death mid-dialogue
+                        with cf.ThreadPoolExecutor(n_conversations) as tp:
+                            futs = [tp.submit(one_turn, ci, t)
+                                    for ci in range(n_conversations)]
+                            for f in futs:
+                                ci, res = f.result(timeout=300)
+                                assert res["done"], \
+                                    f"turn {t} conv {ci} incomplete"
+                                assert len(res["tokens"]) == max_new
+                                hist[ci] = (hist[ci] + res["tokens"]
+                                            + fresh_tokens(4))
+                                new_tokens += len(res["tokens"])
+                                ttft_all.append(res["ttft_ms"])
+                                if t > 0:
+                                    ttft_follow.append(res["ttft_ms"])
+                    wall = time.perf_counter() - t0
+                    srt = sorted(ttft_follow)
+                    return {"tokens_per_s": new_tokens / wall,
+                            "wall_s": wall,
+                            "turns_completed": turns * n_conversations,
+                            "ttft_p50_ms": srt[len(srt) // 2],
+                            "ttft_p99_ms": srt[min(int(len(srt) * 0.99),
+                                                   len(srt) - 1)],
+                            "ttft_max_ms": max(ttft_all)}
+
+                # naive first (cold session tables on both phases would
+                # only help naive; running it first also leaves the
+                # affine phase a warm steady-state view)
+                out["naive"] = run_phase(False, "naive")
+                out["affine"] = run_phase(True, "affine")
+
+                # server-side proof the win came from prefix reuse
+                hits = misses = saved = 0
+                for rep in pool.replicas():
+                    try:
+                        st = pool.call_on(rep.iid, "gen.stats", {},
+                                          timeout=10)
+                    except Exception:
+                        continue
+                    hits += st["prefix_hits"]
+                    misses += st["prefix_misses"]
+                    saved += st["prefix_tokens_saved"]
+                out["prefix_hits"] = hits
+                out["prefix_misses"] = misses
+                out["prefix_tokens_saved"] = saved
+
+                # replica-kill: fresh affine conversations, one replica
+                # SIGKILLed between turns 1 and 2 — every turn must still
+                # complete (the affinity layer re-homes the session and
+                # the engine re-prefills from scratch)
+                out["killed_replica"] = True
+                kill = run_phase(True, "kill", extra_turns=0, kill_at=2)
+                out["kill_phase"] = {
+                    "turns_completed": kill["turns_completed"],
+                    "turns_expected": n_turns * n_conversations,
+                    "tokens_per_s": kill["tokens_per_s"]}
+
+        registry.close()
+
+    out["speedup_tokens_per_s"] = (out["affine"]["tokens_per_s"]
+                                   / max(out["naive"]["tokens_per_s"],
+                                         1e-9))
+    out["ttft_p99_reduction_x"] = (out["naive"]["ttft_p99_ms"]
+                                   / max(out["affine"]["ttft_p99_ms"],
+                                         1e-9))
+    assert out["speedup_tokens_per_s"] >= 2.0, \
+        f"serve_session: affine+chunked is only " \
+        f"{out['speedup_tokens_per_s']:.2f}x naive tokens/s (need >=2x)\n" \
+        f"  naive:  {out['naive']}\n  affine: {out['affine']}\n" \
+        f"  hits={out['prefix_hits']} misses={out['prefix_misses']} " \
+        f"saved={out['prefix_tokens_saved']}"
+    assert out["affine"]["ttft_p99_ms"] < out["naive"]["ttft_p99_ms"], \
+        f"serve_session: follow-up TTFT p99 {out['affine']['ttft_p99_ms']:.1f}ms " \
+        f"not below naive {out['naive']['ttft_p99_ms']:.1f}ms"
+    assert out["prefix_hits"] > 0, \
+        "serve_session: no server-side prefix hits recorded"
+    assert (out["kill_phase"]["turns_completed"]
+            == out["kill_phase"]["turns_expected"]), \
+        f"serve_session: lost requests across replica kill " \
+        f"({out['kill_phase']})"
+    return out
+
+
 def run_all(verbose=True, transports=("self", "sm", "tcp"),
             smoke=False, only=None) -> List[Dict]:
     unknown = [t for t in transports if t not in ("self", "sm", "tcp")]
@@ -1403,7 +1677,8 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                          f"choose from self, sm, tcp")
     known_benches = ("latency", "bandwidth", "rate", "pool", "overload",
                      "registry_failover", "gossip_churn", "cached_resolve",
-                     "trace_overhead", "registry_scale")
+                     "trace_overhead", "registry_scale", "sm_burst",
+                     "serve_session")
     if only:
         bad = [b for b in only if b not in known_benches]
         if bad:
@@ -1417,7 +1692,8 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
         return (name in only if only
                 else name not in ("overload", "registry_failover",
                                   "gossip_churn", "cached_resolve",
-                                  "trace_overhead", "registry_scale"))
+                                  "trace_overhead", "registry_scale",
+                                  "serve_session"))
 
     iters = 50 if smoke else 200
     sizes = (4 << 10, 1 << 20) if smoke else \
@@ -1450,6 +1726,10 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
             n_calls=150 if smoke else 450))
     if want("registry_scale"):
         results.append(bench_registry_scale(smoke=smoke))
+    if want("sm_burst"):
+        results.append(bench_sm_burst(n_frames=100 if smoke else 200))
+    if want("serve_session"):
+        results.append(bench_serve_session(smoke=smoke))
     if verbose:
         lat = next((r for r in results if r["name"] == "rpc_latency"), None)
         if lat is not None:
@@ -1565,6 +1845,27 @@ def run_all(verbose=True, transports=("self", "sm", "tcp"),
                             else f"(gate skipped: {gate['reason']})")
                     print(f"   write speedup "
                           f"{res['write_speedup_x']:.2f}x {tail}")
+            if res["name"] == "sm_burst":
+                print(f"[sm_burst] {res['frames_sent']} frames queued "
+                      f"against a sleeping consumer: {res['bells']} "
+                      f"doorbell writes ({res['coalesce_x']:.0f}x "
+                      f"coalesced), {res['delivered']} delivered")
+            if res["name"] == "serve_session":
+                for variant in ("naive", "affine"):
+                    v = res[variant]
+                    print(f"[serve_session] {variant:6s} "
+                          f"{v['tokens_per_s']:7.1f} tok/s | follow-up "
+                          f"TTFT p50 {v['ttft_p50_ms']:.0f}ms "
+                          f"p99 {v['ttft_p99_ms']:.0f}ms")
+                print(f"[serve_session] affine+chunked is "
+                      f"{res['speedup_tokens_per_s']:.2f}x tokens/s, "
+                      f"TTFT p99 {res['ttft_p99_reduction_x']:.1f}x lower "
+                      f"| prefix hits {res['prefix_hits']} "
+                      f"({res['prefix_tokens_saved']} tokens saved) | "
+                      f"replica-kill: "
+                      f"{res['kill_phase']['turns_completed']}/"
+                      f"{res['kill_phase']['turns_expected']} turns "
+                      f"survived")
             if res["name"] == "routed_pool_overload":
                 print(f"[overload] {res['workers']}x{res['worker_threads']}"
                       f" handlers @ {res['work_ms']:.0f}ms, "
@@ -1596,7 +1897,8 @@ if __name__ == "__main__":
                     help="comma-separated subset of "
                          "latency,bandwidth,rate,pool,overload,"
                          "registry_failover,gossip_churn,cached_resolve,"
-                         "trace_overhead,registry_scale")
+                         "trace_overhead,registry_scale,sm_burst,"
+                         "serve_session")
     args = ap.parse_args()
     res = run_all(transports=tuple(args.transports.split(",")),
                   smoke=args.smoke,

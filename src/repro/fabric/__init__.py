@@ -9,8 +9,10 @@ See DESIGN.md §7 for the registry schema, the balancer contract and the
 credit/flow-control state machine, and §8 for the replication protocol;
 docs/OPERATIONS.md is the operator's guide.
 """
+from .affinity import SessionAffinity
 from .balancer import (BALANCERS, Balancer, EwmaWeighted, LeastLoaded,
-                       LocalityAware, RoundRobin, make_balancer)
+                       LocalityAware, RoundRobin, make_balancer,
+                       prefer_instance)
 from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, FabricError,
                      NonRetryable, RetryPolicy, call_with_budget)
@@ -25,7 +27,8 @@ from .sharding import (ShardedRegistryClient, membership_home,
 
 __all__ = [
     "Balancer", "BALANCERS", "RoundRobin", "LeastLoaded", "LocalityAware",
-    "EwmaWeighted", "make_balancer", "CreditGate", "AdaptiveCreditGate",
+    "EwmaWeighted", "make_balancer", "prefer_instance", "SessionAffinity",
+    "CreditGate", "AdaptiveCreditGate",
     "RetryPolicy", "call_with_budget",
     "FabricError", "DeadlineExceeded", "BudgetExhausted", "NonRetryable",
     "ServicePool", "PoolError", "Replica", "RegistryService",

@@ -141,6 +141,22 @@ class EwmaWeighted(Balancer):
         return _rotate_ties(base, key, n)
 
 
+def prefer_instance(ranked: List["Replica"],
+                    iid: str | None) -> List["Replica"]:
+    """Soft-affinity reorder: move the replica with ``iid`` to the front
+    of an already-ranked candidate list, keeping the balancer's order for
+    everyone else (they are the fallback path).  A ``iid`` that is not in
+    the list — dead, deregistered, or filtered as already-failed — leaves
+    the ranking untouched, which is exactly the affinity contract: prefer
+    the KV-holding replica, never *depend* on it."""
+    if iid is None:
+        return ranked
+    for i, r in enumerate(ranked):
+        if r.iid == iid:
+            return [r] + list(ranked[:i]) + list(ranked[i + 1:])
+    return ranked
+
+
 BALANCERS: Dict[str, Type[Balancer]] = {
     "rr": RoundRobin,
     "least": LeastLoaded,

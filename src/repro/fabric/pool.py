@@ -61,7 +61,7 @@ from ..core.na.multi import scheme_of as _scheme
 from ..core.types import MercuryError, Ret
 from ..telemetry import metrics as _metrics
 from ..telemetry import trace as _trace
-from .balancer import Balancer, make_balancer
+from .balancer import Balancer, make_balancer, prefer_instance
 from .flow import AdaptiveCreditGate, CreditGate
 from .policy import (BudgetExhausted, DeadlineExceeded, NonRetryable,
                      RetryPolicy, call_with_budget)
@@ -373,12 +373,21 @@ class ServicePool:
     def call_routed(self, rpc: str, arg: Any = None,
                     timeout: Optional[float] = None,
                     deadline: Optional[float] = None,
-                    policy: Optional[RetryPolicy] = None) -> tuple:
+                    policy: Optional[RetryPolicy] = None,
+                    prefer: Optional[str] = None) -> tuple:
         """Like :meth:`call` but returns ``(value, iid)`` — the instance
         that actually served the request.  Use with :meth:`call_on` for
         replica-affine protocols (``gen.submit``'s rid only exists on the
-        replica that admitted it)."""
-        return self._call(rpc, arg, timeout, deadline, policy, None)
+        replica that admitted it).
+
+        ``prefer`` is *soft* affinity: route to that instance first if it
+        is live, but fall back to the normal balancer ranking when it is
+        down, gone from the view, or has already failed this call — the
+        session-affinity layer uses this so a dead KV-holding replica
+        degrades to a fresh-prefill route instead of an error (contrast
+        :meth:`call_on`, which is a hard pin)."""
+        return self._call(rpc, arg, timeout, deadline, policy, None,
+                          prefer=prefer)
 
     def call_on(self, iid: str, rpc: str, arg: Any = None,
                 timeout: Optional[float] = None,
@@ -394,7 +403,8 @@ class ServicePool:
 
     def _call(self, rpc: str, arg: Any, timeout: Optional[float],
               deadline: Optional[float], policy: Optional[RetryPolicy],
-              only_iid: Optional[str]) -> tuple:
+              only_iid: Optional[str],
+              prefer: Optional[str] = None) -> tuple:
         policy = policy or self.policy
         if deadline is None:
             deadline = time.monotonic() + (timeout if timeout is not None
@@ -420,7 +430,8 @@ class ServicePool:
             else:
                 self.refresh()
             return self._attempt_once(rpc, arg, attempt_timeout, policy,
-                                      state, deadline, only_iid)
+                                      state, deadline, only_iid,
+                                      prefer=prefer)
 
         t0 = time.monotonic()
         _M_CALLS.inc()
@@ -435,7 +446,8 @@ class ServicePool:
         return result, state["winner"]
 
     def _candidates(self, failed: set,
-                    only_iid: Optional[str] = None) -> List[Replica]:
+                    only_iid: Optional[str] = None,
+                    prefer: Optional[str] = None) -> List[Replica]:
         reps = self.replicas()
         if only_iid is not None:
             reps = [r for r in reps if r.iid == only_iid]
@@ -446,17 +458,22 @@ class ServicePool:
             ranked = self.balancer.rank(
                 [r for r in reps if r.reresolve(self.engine)])
         pref = [r for r in ranked if r.iid not in failed]
-        return pref or ranked             # all failed once: try them again
+        # soft affinity last: a preferred iid that is down, gone, or in
+        # ``failed`` never survives the filters above, so the fallback to
+        # plain balancer order is automatic
+        return prefer_instance(pref or ranked, prefer)
 
     def _attempt_once(self, rpc: str, arg: Any, attempt_timeout: float,
                       policy: RetryPolicy, state: dict, deadline: float,
-                      only_iid: Optional[str] = None) -> Any:
+                      only_iid: Optional[str] = None,
+                      prefer: Optional[str] = None) -> Any:
         t_start = time.monotonic()
         # re-clamp to the caller's absolute deadline: the view refresh
         # that ran before this attempt burned real time after
         # attempt_timeout was computed
         attempt_deadline = min(t_start + attempt_timeout, deadline)
-        candidates = self._candidates(state["failed_iids"], only_iid)
+        candidates = self._candidates(state["failed_iids"], only_iid,
+                                      prefer=prefer)
         if not candidates:
             raise PoolError(Ret.NOENTRY,
                             f"no live replicas for {self.service!r}"

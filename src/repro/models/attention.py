@@ -115,6 +115,32 @@ def attn_prefill(cfg: ModelConfig, p: dict, x, *, kind: str = "attn",
     return _out(cfg, p, o), cache
 
 
+def attn_prefill_chunk(cfg: ModelConfig, p: dict, x, cache: dict, offset, *,
+                       kind: str = "attn",
+                       prefix_len=None) -> Tuple[jax.Array, dict]:
+    """Prefill *continuation*: an S-token chunk at absolute positions
+    ``offset .. offset+S`` attending causally against a full-length cache
+    (earlier chunks / a resumed session's KV live below ``offset``; the
+    chunk's own K/V are written at ``offset`` first).  This is the
+    building block for micro-batched prefill and KV-session resume —
+    ``attn_prefill`` with S == prompt length and ``offset == 0`` is the
+    degenerate single-chunk case."""
+    B, S, _ = x.shape
+    off = jnp.asarray(offset, jnp.int32)
+    positions = off + jnp.arange(S)[None, :]
+    q = _project_q(cfg, p, x, positions, kind)
+    k_new, v_new = _project_kv(cfg, p, x, positions, kind)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, off, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, off, 0, 0))
+    window = cfg.window if kind == "local" else 0
+    o = ops.attention(q, k, v, causal=True, window=window,
+                      softcap=cfg.attn_softcap, q_offset=off,
+                      prefix_len=prefix_len, impl="xla")
+    return _out(cfg, p, o), {"k": k, "v": v}
+
+
 def attn_decode(cfg: ModelConfig, p: dict, x, cache: dict, pos, *,
                 kind: str = "attn", prefix_len=None) -> Tuple[jax.Array, dict]:
     """One-token decode against the KV cache. x: (B,1,d); ``pos`` is a

@@ -82,7 +82,7 @@ def _ffn(cfg, p, x, *, spmd, capacity_factor, impl, dropless=False):
 
 
 def block_apply(cfg: ModelConfig, p: dict, x, kind: str, *,
-                mode: str,                 # "train" | "prefill" | "decode"
+                mode: str,     # "train" | "prefill" | "chunk" | "decode"
                 cache: Optional[dict] = None,
                 pos=None, cache_len: int = 0,
                 prefix_len=None, spmd=None, impl: str = "auto",
@@ -112,12 +112,22 @@ def block_apply(cfg: ModelConfig, p: dict, x, kind: str, *,
                                             cache_len=cache_len,
                                             prefix_len=prefix_len, impl=impl)
             new_cache = dict(new_cache or {}); new_cache.update(kv)
+        elif mode == "chunk":
+            kv = {"k": cache["k"], "v": cache["v"]}
+            mix, kv = attn_mod.attn_prefill_chunk(cfg, p["attn"], h, kv,
+                                                  pos, kind=kind,
+                                                  prefix_len=prefix_len)
+            new_cache.update(kv)
         else:
             kv = {"k": cache["k"], "v": cache["v"]}
             mix, kv = attn_mod.attn_decode(cfg, p["attn"], h, kv, pos,
                                            kind=kind, prefix_len=prefix_len)
             new_cache.update(kv)
     elif kind == "rglru":
+        if mode == "chunk":
+            raise ValueError("chunked prefill requires attention-family "
+                             "blocks (rglru carries no resumable prefill "
+                             "state)")
         if mode == "decode":
             mix, st = rglru_block.rglru_block_decode(cfg, p["rec"], h, cache)
             new_cache.update(st)
@@ -127,6 +137,10 @@ def block_apply(cfg: ModelConfig, p: dict, x, kind: str, *,
             if mode == "prefill":
                 new_cache = st
     elif kind == "ssd":
+        if mode == "chunk":
+            raise ValueError("chunked prefill requires attention-family "
+                             "blocks (ssd carries no resumable prefill "
+                             "state)")
         if mode == "decode":
             mix, st = ssd_block.ssd_block_decode(cfg, p["rec"], h, cache)
             new_cache.update(st)
@@ -454,6 +468,73 @@ class Model:
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         logits = unembed(cfg, params["embed"], h)[:, 0]
         return logits, new_cache
+
+    # ------------------------------------------------------------ chunked
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when the prompt can be prefilled in fixed-size chunks
+        (and a session's KV resumed at an offset): every block must
+        support continuation against an absolute-position cache.
+        Attention caches do; the recurrent families (rglru/ssd) expose
+        no carried-state prefill, and prefix-LM masks / enc-dec
+        cross-attention are whole-prompt constructs."""
+        kinds = set(self.cfg.period) | set(self.trailing_kinds)
+        if self.prefix_count:
+            kinds.add(self.cfg.kind_at(0))
+        return (not self.is_encdec and not self.cfg.prefix_lm
+                and all(k in ATTN_KINDS for k in kinds))
+
+    def prefill_chunk(self, params, cache, tokens, offset, *, spmd=None,
+                      impl: str = "auto"):
+        """One fixed-size prefill chunk: ``tokens`` (B,C) land at
+        absolute positions ``offset .. offset+C`` of an existing
+        full-length cache (zeroed for a fresh prompt; a pinned session's
+        KV for a resumed one).  Returns (logits (B,C,V), new cache) —
+        the caller samples from the position of the last *real* prompt
+        token once the final chunk lands.  Requires
+        :attr:`supports_chunked_prefill`."""
+        cfg = self.cfg
+        h = embed_tokens(cfg, params["embed"], tokens)
+
+        def apply_one(h, p, kind, c):
+            h, _, nc = block_apply(cfg, p, h, kind, mode="chunk", cache=c,
+                                   pos=offset, spmd=spmd, impl=impl,
+                                   capacity_factor=None)
+            return h, nc
+
+        new_cache: Dict[str, Any] = {}
+        new_cache["prefix"] = []
+        for p, c in zip(params.get("prefix", ()), cache.get("prefix", ())):
+            h, nc = apply_one(h, p, cfg.period[0], c)
+            new_cache["prefix"].append(nc)
+        new_cache["prefix"] = tuple(new_cache["prefix"])
+
+        plen = len(cfg.period)
+
+        def period_body(h, xs):
+            layer_p, layer_c = xs
+            ncs = []
+            for posn in range(plen):
+                h, nc = apply_one(h, layer_p[posn], cfg.period[posn],
+                                  layer_c[posn])
+                ncs.append(nc)
+            return h, tuple(ncs)
+
+        if self.n_scan_periods:
+            h, new_cache["periods"] = jax.lax.scan(
+                period_body, h, (params["periods"], cache["periods"]))
+        else:
+            new_cache["periods"] = ()
+
+        new_cache["trailing"] = []
+        for (p, kind), c in zip(zip(params["trailing"], self.trailing_kinds),
+                                cache["trailing"]):
+            h, nc = apply_one(h, p, kind, c)
+            new_cache["trailing"].append(nc)
+        new_cache["trailing"] = tuple(new_cache["trailing"])
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return unembed(cfg, params["embed"], h), new_cache
 
     # ------------------------------------------------------------------ specs
     def cache_specs(self, batch_size: int, cache_len: int,

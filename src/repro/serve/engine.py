@@ -1,4 +1,5 @@
-"""KV-cache serving engine with continuous batching.
+"""KV-cache serving engine: continuous batching, chunked prefill, and
+KV session reuse.
 
 A fixed pool of ``n_slots`` sequence slots shares one batched cache
 pytree.  New requests prefill into a free slot (B=1 prefill, scatter at
@@ -6,6 +7,27 @@ the cache's batch dim — located via the cache's logical axes); every
 ``step()`` decodes *all* active slots in lockstep with per-slot positions
 (the vector-``pos`` decode path).  Finished slots free immediately and
 the next queued request takes over — classic continuous batching.
+
+**Chunked prefill** (``chunk_tokens > 0``): instead of one monolithic
+prompt pass that monopolizes the step loop, the prompt lands in
+fixed-size chunks — one chunk per ``step()``, interleaved with the
+decode of every other active slot — so a long prompt no longer hides the
+TTFT of queued short requests behind it.  The last chunk is padded to
+the fixed size (one jit compile for any prompt length; the padded
+garbage K/V sit *above* the live position and are overwritten by decode
+writes before any query can attend them).  Requires
+``model.supports_chunked_prefill`` (attention-family blocks only);
+otherwise the engine silently falls back to monolithic prefill.
+
+**KV sessions** (``session_cap > 0``): when a request carries a
+``session_id``, the slot's KV cache stays *pinned in its slot* after the
+request finishes (``slot_req`` is freed; the session table remembers the
+slot, the token history and the live position).  A follow-up submit with
+the same ``session_id`` whose prompt extends the cached history resumes
+from the cached position — only the suffix is prefilled (through the
+chunk path, at an offset).  Pinned slots are evicted LRU-first whenever
+a fresh request needs a slot or the table exceeds ``session_cap``;
+correctness never depends on the cache (a miss is just a full prefill).
 
 The Mercury serving gateway (services/gateway.py) drives this engine from
 RPC handlers; ``generate()`` is the synchronous convenience wrapper used
@@ -16,8 +38,9 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +48,20 @@ import numpy as np
 
 from ..models import Model, unzip
 from ..models.common import P, is_p
+from ..telemetry import metrics as _metrics
+
+# unified metrics (fab.metrics exports these; the per-engine view is in
+# stats()/gen.stats): session-reuse effectiveness + slot pressure
+_M_PREFIX_HITS = _metrics.counter("serve.engine.prefix_hits")
+_M_PREFIX_MISSES = _metrics.counter("serve.engine.prefix_misses")
+_M_TOKENS_SAVED = _metrics.counter("serve.engine.prefix_tokens_saved")
+_M_EVICTIONS = _metrics.counter("serve.engine.session_evictions")
+_G_OCCUPANCY = _metrics.gauge("serve.engine.occupancy")
+_G_PINNED = _metrics.gauge("serve.engine.pinned_sessions")
+
+# chunk size used for session *resume* when chunked prefill is otherwise
+# disabled (the resume path is built on prefill-at-an-offset)
+_RESUME_CHUNK = 32
 
 
 @dataclass
@@ -35,6 +72,7 @@ class Request:
     temperature: float = 0.0           # 0 = greedy
     eos_id: int = -1                   # -1 = never
     frontend: Optional[np.ndarray] = None
+    session_id: Optional[str] = None   # KV-session key (None = stateless)
     out_tokens: List[int] = field(default_factory=list)
     done_event: threading.Event = field(default_factory=threading.Event)
     on_token: Optional[Callable[[int, int], None]] = None
@@ -46,6 +84,8 @@ class Request:
     # EWMA (slot occupancy, admit→done) from this, keeping queue wait
     # out of the shedding estimate
     t_admit: float = 0.0
+    # monotonic time of the first emitted token (TTFT = t_first-t_submit)
+    t_first: float = 0.0
     _done_cbs: List[Callable[[], None]] = field(default_factory=list)  #: guarded-by _cb_lock
     _cb_lock: threading.Lock = field(default_factory=threading.Lock)
 
@@ -71,13 +111,16 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_len: int = 512,
-                 n_slots: int = 4, seed: int = 0, impl: str = "auto"):
+                 n_slots: int = 4, seed: int = 0, impl: str = "auto",
+                 chunk_tokens: int = 0, session_cap: int = 0,
+                 cache_dtype=None):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.n_slots = n_slots
         self.impl = impl
-        cache_p = model.cache_specs(n_slots, max_len)
+        self.cache_dtype = cache_dtype or jnp.bfloat16
+        cache_p = model.cache_specs(n_slots, max_len, dtype=self.cache_dtype)
         self.cache, self.cache_axes = unzip(cache_p)
         self.pos = np.zeros((n_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -89,29 +132,82 @@ class ServeEngine:
         self._rid = 0  #: guarded-by _lock
         self._lock = threading.Lock()
 
+        # chunked prefill + sessions need continuation-at-an-offset,
+        # which only attention-family caches support; fall back silently
+        # (stats() exposes the effective configuration)
+        chunkable = model.supports_chunked_prefill
+        self.chunk = int(chunk_tokens) if (chunk_tokens and chunkable) else 0
+        self.session_cap = int(session_cap) if (session_cap
+                                                and chunkable) else 0
+        # admit-order backlog (step-thread only): requests drained from
+        # the thread-safe submit queue but not yet placed in a slot
+        self._pending: Deque[Request] = deque()
+        # slot -> in-progress chunked-prefill state (step-thread only)
+        self._prefill: Dict[int, dict] = {}
+        # sid -> {"slot", "tokens", "pos"}; iteration order == LRU
+        self.sessions: "OrderedDict[str, dict]" = OrderedDict()
+        # session bound to each slot: for an *active* request, the sid it
+        # will pin on completion; for a free slot, the pinned session
+        self.slot_session: List[Optional[str]] = [None] * n_slots
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_tokens_saved = 0
+        self.session_evictions = 0
+
         self._prefill_jit = jax.jit(
             lambda p, b: self.model.prefill(p, b, cache_len=max_len,
                                             impl=impl))
         self._decode_jit = jax.jit(
             lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
                                                         impl=impl))
+        if self.chunk or self.session_cap:
+            self._chunk_jit = jax.jit(
+                lambda p, c, t, off: self.model.prefill_chunk(p, c, t, off,
+                                                              impl=impl))
+            # zeroed B=1 staging cache, shared template for fresh prompts
+            self._cache1_zero, _ = unzip(
+                model.cache_specs(1, max_len, dtype=self.cache_dtype))
+
+        # slot gather/scatter as single jitted executables (slot index is
+        # a traced scalar: one compile covers every slot).  Eagerly
+        # dispatching one dynamic-slice per cache leaf costs milliseconds
+        # per request on the resume path — comparable to the chunk itself
+        def _gather(cache, slot):
+            def one(src, axes):
+                return jax.lax.dynamic_slice_in_dim(
+                    src, slot, 1, axis=axes.index("batch"))
+            return jax.tree_util.tree_map(
+                one, cache, self.cache_axes,
+                is_leaf=lambda x: hasattr(x, "shape")
+                and not isinstance(x, dict))
+
+        def _scatter(cache, cache1, slot):
+            def one(dst, src, axes):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), slot,
+                    axis=axes.index("batch"))
+            return jax.tree_util.tree_map(
+                one, cache, cache1, self.cache_axes,
+                is_leaf=lambda x: hasattr(x, "shape")
+                and not isinstance(x, dict))
+
+        self._gather_jit = jax.jit(_gather)
+        self._scatter_jit = jax.jit(_scatter)
 
     # ------------------------------------------------------------------ slots
     def _scatter_slot(self, cache, cache1, slot: int):
         """Insert a B=1 cache into the engine cache at ``slot`` (batch dim
         found via logical axes)."""
-        def one(dst, src, axes):
-            b = axes.index("batch")
-            idx = tuple([slice(None)] * b + [slot])
-            return dst.at[idx].set(src.astype(dst.dtype)[
-                tuple([slice(None)] * b + [0])])
-        return jax.tree_util.tree_map(
-            one, cache, cache1, self.cache_axes,
-            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+        return self._scatter_jit(cache, cache1, jnp.int32(slot))
+
+    def _gather_slot(self, slot: int):
+        """Extract slot ``slot`` of the engine cache as a B=1 cache (the
+        staging tree a resumed session's suffix chunks continue into)."""
+        return self._gather_jit(self.cache, jnp.int32(slot))
 
     def submit(self, prompt, max_new: int = 32, temperature: float = 0.0,
                eos_id: int = -1, frontend=None,
-               on_token=None) -> Request:
+               on_token=None, session_id=None) -> Request:
         prompt = np.asarray(prompt, np.int32)
         span = len(prompt) + (self.model.cfg.frontend_seq
                               if frontend is not None else 0)
@@ -119,44 +215,190 @@ class ServeEngine:
             raise ValueError(
                 f"prompt span {span} + max_new {max_new} exceeds the "
                 f"cache length {self.max_len}")
+        if frontend is not None:
+            session_id = None       # sessions are token-prefix keyed
         with self._lock:
             self._rid += 1
             rid = self._rid
         req = Request(rid, prompt, max_new,
-                      temperature, eos_id, frontend, on_token=on_token)
+                      temperature, eos_id, frontend,
+                      session_id=session_id, on_token=on_token)
         req.t_submit = time.monotonic()
         self.queue.put(req)
         self.work.set()
         return req
 
-    def stats(self) -> Dict[str, int]:
-        return {"active_slots": sum(1 for r in self.slot_req if r is not None),
-                "n_slots": self.n_slots, "queued": self.queue.qsize(),
-                "max_len": self.max_len}
+    def pending(self) -> int:
+        """Requests submitted but not yet placed in a slot."""
+        return self.queue.qsize() + len(self._pending)
 
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def stats(self) -> Dict[str, Any]:
+        busy = sum(1 for r in self.slot_req if r is not None)
+        pinned = len(self.sessions)
+        occupancy = busy / max(self.n_slots, 1)
+        _G_OCCUPANCY.set(occupancy)
+        _G_PINNED.set(pinned)
+        return {"active_slots": busy,
+                "n_slots": self.n_slots, "queued": self.pending(),
+                "max_len": self.max_len,
+                "occupancy": occupancy,
+                "prefilling": len(self._prefill),
+                "pinned_sessions": pinned,
+                "session_capacity": self.session_cap,
+                "session_evictions": self.session_evictions,
+                "chunk_tokens": self.chunk,
+                "prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses,
+                "prefix_tokens_saved": self.prefix_tokens_saved}
 
+    # ---------------------------------------------------------------- sessions
+    def _evict(self, sid: str) -> int:
+        """Drop a pinned session; returns the slot it freed."""
+        st = self.sessions.pop(sid)
+        self.slot_session[st["slot"]] = None
+        self.session_evictions += 1
+        _M_EVICTIONS.inc()
+        return st["slot"]
+
+    def _take_slot(self) -> Optional[int]:
+        """A slot for a fresh request: truly free first, else evict the
+        LRU pinned session; None when every slot is actively decoding."""
+        for i, r in enumerate(self.slot_req):
+            if r is None and self.slot_session[i] is None:
+                return i
+        for sid in list(self.sessions):          # OrderedDict: LRU first
+            if self.slot_req[self.sessions[sid]["slot"]] is None:
+                return self._evict(sid)
+        return None
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a finished slot; with sessions enabled and a session id
+        bound, the KV stays pinned in the slot under that id."""
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        sid = self.slot_session[slot]
+        self.slot_session[slot] = None
+        if sid is None or req is None or self.session_cap <= 0:
+            return
+        # cache holds positions 0..pos-1 = full prompt + all emitted
+        # tokens except the last (its K/V was never written)
+        tokens = np.concatenate([
+            np.asarray(req.prompt, np.int32),
+            np.asarray(req.out_tokens[:-1], np.int32)])
+        if len(tokens) != int(self.pos[slot]):
+            return                      # frontend span etc.: not resumable
+        old = self.sessions.pop(sid, None)
+        if old is not None:
+            self.slot_session[old["slot"]] = None
+        while len(self.sessions) >= self.session_cap:
+            self._evict(next(iter(self.sessions)))
+        self.sessions[sid] = {"slot": slot, "tokens": tokens,
+                              "pos": int(self.pos[slot])}
+        self.slot_session[slot] = sid
+
+    # ------------------------------------------------------------------ admit
     def _admit(self):
-        for slot in self._free_slots():
+        while True:
             try:
-                req = self.queue.get_nowait()
+                self._pending.append(self.queue.get_nowait())
             except queue.Empty:
-                return
+                break
+        while self._pending:
+            req = self._pending[0]
+            sid = req.session_id if self.session_cap > 0 else None
+            st = self.sessions.get(sid) if sid is not None else None
+            if st is not None:
+                n = st["pos"]
+                if (len(req.prompt) > n
+                        and np.array_equal(req.prompt[:n], st["tokens"])):
+                    # session hit: resume in the pinned slot, prefill
+                    # only the suffix at the cached offset
+                    self._pending.popleft()
+                    slot = st["slot"]
+                    self.sessions.pop(sid)       # re-pinned on completion
+                    self.prefix_hits += 1
+                    self.prefix_tokens_saved += n
+                    _M_PREFIX_HITS.inc()
+                    _M_TOKENS_SAVED.inc(n)
+                    req.t_admit = time.monotonic()
+                    self.slot_req[slot] = req
+                    self.slot_session[slot] = sid
+                    self._start_chunked(slot, req, req.prompt[n:], base=n,
+                                        cache1=self._gather_slot(slot))
+                    continue
+                # stale prefix: the cached KV is useless for this prompt
+                self._evict(sid)
+            if sid is not None:
+                self.prefix_misses += 1
+                _M_PREFIX_MISSES.inc()
+            slot = self._take_slot()
+            if slot is None:
+                return                   # every slot actively decoding
+            self._pending.popleft()
             req.t_admit = time.monotonic()
-            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-            if req.frontend is not None:
-                batch["frontend"] = jnp.asarray(req.frontend[None])
-            logits, cache1 = self._prefill_jit(self.params, batch)
-            self.cache = self._scatter_slot(self.cache, cache1, slot)
-            tok = self._sample(logits[0], req)
-            prompt_span = len(req.prompt) + (
-                self.model.cfg.frontend_seq
-                if req.frontend is not None else 0)
-            self.pos[slot] = prompt_span
             self.slot_req[slot] = req
-            self.last_tok[slot] = tok
-            self._emit(req, tok)
+            self.slot_session[slot] = sid
+            if self.chunk and req.frontend is None:
+                self._start_chunked(slot, req, req.prompt, base=0,
+                                    cache1=self._cache1_zero)
+            else:
+                self._prefill_monolithic(slot, req)
+
+    def _prefill_monolithic(self, slot: int, req: Request):
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        if req.frontend is not None:
+            batch["frontend"] = jnp.asarray(req.frontend[None])
+        logits, cache1 = self._prefill_jit(self.params, batch)
+        self.cache = self._scatter_slot(self.cache, cache1, slot)
+        tok = self._sample(logits[0], req)
+        prompt_span = len(req.prompt) + (
+            self.model.cfg.frontend_seq
+            if req.frontend is not None else 0)
+        self.pos[slot] = prompt_span
+        self.last_tok[slot] = tok
+        self._emit(req, tok)
+        if req.done_event.is_set():
+            self._release_slot(slot)
+
+    # ---------------------------------------------------------------- chunked
+    def _start_chunked(self, slot: int, req: Request, suffix, *, base: int,
+                       cache1):
+        """Queue a chunked prefill: ``suffix`` tokens land at absolute
+        positions ``base..`` of the B=1 staging cache, one chunk per
+        step().  Padded to the fixed chunk size so any prompt length
+        reuses one jit compile (padded K/V sit above the live position;
+        decode overwrites them before they become visible)."""
+        C = self.chunk or _RESUME_CHUNK
+        toks = np.asarray(suffix, np.int32)
+        n = len(toks)
+        pad = (-n) % C
+        if pad:
+            toks = np.concatenate([toks, np.zeros(pad, np.int32)])
+        self._prefill[slot] = {"req": req, "cache1": cache1, "toks": toks,
+                               "n": n, "off": 0, "base": base}
+
+    def _prefill_step(self, slot: int, st: dict):
+        """Advance one chunk; on the final chunk, scatter the staged
+        cache into the slot and emit the first sampled token."""
+        C = self.chunk or _RESUME_CHUNK
+        req = st["req"]
+        chunk = jnp.asarray(st["toks"][st["off"]:st["off"] + C][None, :])
+        off = st["base"] + st["off"]
+        logits, st["cache1"] = self._chunk_jit(self.params, st["cache1"],
+                                               chunk, jnp.int32(off))
+        st["off"] += C
+        if st["off"] < st["n"]:
+            return
+        # prefill complete
+        del self._prefill[slot]
+        last = st["n"] - 1 - (st["off"] - C)   # last real token, this chunk
+        self.cache = self._scatter_slot(self.cache, st["cache1"], slot)
+        self.pos[slot] = st["base"] + st["n"]
+        tok = self._sample(logits[0, last], req)
+        self.last_tok[slot] = tok
+        self._emit(req, tok)
+        if req.done_event.is_set():
+            self._release_slot(slot)
 
     def _sample(self, logits, req: Request) -> int:
         if req.temperature <= 0.0:
@@ -165,6 +407,8 @@ class ServeEngine:
         return int(jax.random.categorical(k, logits / req.temperature))
 
     def _emit(self, req: Request, tok: int):
+        if not req.out_tokens:
+            req.t_first = time.monotonic()
         req.out_tokens.append(tok)
         if req.on_token:
             req.on_token(req.rid, tok)
@@ -174,39 +418,47 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ step
     def step(self) -> int:
-        """One decode step for all active slots; returns #active."""
+        """One engine step: admit, advance one prefill chunk per
+        prefilling slot, one decode step for all decoding slots; returns
+        #occupied slots (decoding + mid-prefill)."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return 0
-        toks = jnp.asarray(self.last_tok[:, None])
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode_jit(self.params, self.cache,
-                                              toks, pos)
-        for i in active:
-            req = self.slot_req[i]
-            if req.done_event.is_set():
-                self.slot_req[i] = None
-                continue
-            tok = self._sample(logits[i], req)
-            self.pos[i] += 1
-            self.last_tok[i] = tok
-            self._emit(req, tok)
-            if req.done_event.is_set():
-                self.slot_req[i] = None
-        return len([r for r in self.slot_req if r is not None])
+        for slot in list(self._prefill):
+            self._prefill_step(slot, self._prefill[slot])
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in self._prefill]
+        if active:
+            toks = jnp.asarray(self.last_tok[:, None])
+            pos = jnp.asarray(self.pos)
+            logits, self.cache = self._decode_jit(self.params, self.cache,
+                                                  toks, pos)
+            for i in active:
+                req = self.slot_req[i]
+                if req.done_event.is_set():
+                    self._release_slot(i)
+                    continue
+                tok = self._sample(logits[i], req)
+                self.pos[i] += 1
+                self.last_tok[i] = tok
+                self._emit(req, tok)
+                if req.done_event.is_set():
+                    self._release_slot(i)
+        return sum(1 for r in self.slot_req if r is not None)
 
     def drain(self):
-        """Run steps until queue and slots are empty."""
+        """Run steps until queue and slots are empty (pinned sessions
+        hold no slot_req and do not block draining)."""
         while True:
             n = self.step()
-            if n == 0 and self.queue.empty():
+            if n == 0 and self.pending() == 0:
                 return
 
     def generate(self, prompts, max_new: int = 32, temperature: float = 0.0,
-                 eos_id: int = -1, frontends=None) -> List[List[int]]:
+                 eos_id: int = -1, frontends=None,
+                 session_ids=None) -> List[List[int]]:
         reqs = [self.submit(p, max_new, temperature, eos_id,
-                            None if frontends is None else frontends[i])
+                            None if frontends is None else frontends[i],
+                            session_id=(None if session_ids is None
+                                        else session_ids[i]))
                 for i, p in enumerate(prompts)]
         self.drain()
         return [r.out_tokens for r in reqs]

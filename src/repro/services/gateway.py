@@ -1,8 +1,13 @@
 """Serving gateway: the Mercury RPC front door for the ServeEngine.
 
 RPCs:
-  ``gen.submit``   {tokens, max_new, temperature, eos_id[, frontend]}
-                   → {rid}                      (non-blocking enqueue)
+  ``gen.submit``   {tokens, max_new, temperature, eos_id[, frontend]
+                   [, session_id]} → {rid}      (non-blocking enqueue)
+                   ``session_id`` keys the engine's KV-session table: a
+                   follow-up turn whose prompt extends the cached history
+                   resumes from the pinned KV instead of re-prefilling
+                   (see serve/engine.py); the fabric's SessionAffinity
+                   layer keeps follow-ups on the KV-holding replica
   ``gen.submit_bulk`` {desc, count, ...} — the prompt tokens stay in the
                    client's registered memory; the gateway pulls them
                    one-sidedly (zero-copy on sm/self transports) instead
@@ -106,9 +111,15 @@ class ServingGateway:
         self._thread.start()
 
     def _load(self) -> float:
-        """Outstanding work items — the piggybacked balancing signal."""
+        """The piggybacked balancing signal: in-flight slot occupancy +
+        queue depth + pinned-session pressure.  Pinned sessions hold no
+        ``slot_req`` — a gateway whose batch is entirely pinned KV would
+        report near-idle on active+queued alone, yet admitting a fresh
+        request there costs an eviction (and some other session its
+        cache), so they count at half weight."""
         s = self.serve.stats()
-        return float(s["active_slots"] + s["queued"])
+        return float(s["active_slots"] + s["queued"]
+                     + 0.5 * s["pinned_sessions"])
 
     def _admit(self, handle) -> None:
         """Deadline-aware admission: shed with ``Ret.OVERLOAD`` when the
@@ -129,7 +140,8 @@ class ServingGateway:
             max_new=int(req_in.get("max_new", 32)),
             temperature=float(req_in.get("temperature", 0.0)),
             eos_id=int(req_in.get("eos_id", -1)),
-            frontend=None if fe is None else np.asarray(fe, np.float32))
+            frontend=None if fe is None else np.asarray(fe, np.float32),
+            session_id=req_in.get("session_id"))
         with self._lock:
             self.requests[req.rid] = req
         # feed the admission EWMA from every completion.  The EWMA that
@@ -192,9 +204,15 @@ class ServingGateway:
         out = {"rid": self._enqueue(req_in).rid}
         handle.respond(out)
 
+    @staticmethod
+    def _ttft_ms(req: Request) -> float:
+        return round((req.t_first - req.t_submit) * 1e3, 3) \
+            if req.t_first else -1.0
+
     def _result_payload(self, rid: int, req: Request) -> dict:
         done = req.done_event.is_set()
-        out = {"tokens": list(req.out_tokens), "done": done}
+        out = {"tokens": list(req.out_tokens), "done": done,
+               "ttft_ms": self._ttft_ms(req)}
         if done:
             with self._lock:
                 self.requests.pop(rid, None)
@@ -250,14 +268,19 @@ class ServingGateway:
         with self._lock:
             self.requests.pop(req.rid, None)
         return {"tokens": list(req.out_tokens),
-                "done": req.done_event.is_set()}
+                "done": req.done_event.is_set(),
+                "ttft_ms": self._ttft_ms(req)}
 
     def _stats(self, _req):
         out = self.serve.stats()
         with self._lock:
             steps = self.steps
+        lookups = out["prefix_hits"] + out["prefix_misses"]
         out.update(steps=steps, uris=self.engine.uri,
-                   load=self._load(), **self.admission.stats())
+                   load=self._load(),
+                   prefix_hit_rate=(out["prefix_hits"] / lookups
+                                    if lookups else 0.0),
+                   **self.admission.stats())
         return out
 
     def _loop(self):
@@ -266,12 +289,12 @@ class ServingGateway:
             if n:
                 with self._lock:
                     self.steps += 1
-            if n == 0 and self.serve.queue.empty():
+            if n == 0 and self.serve.pending() == 0:
                 # park until the next submit (double-check after clearing
                 # so a racing submit can't be missed; the bounded wait
                 # caps the cost of any residual race)
                 self.serve.work.clear()
-                if self.serve.queue.empty() and not self._stop.is_set():
+                if self.serve.pending() == 0 and not self._stop.is_set():
                     self.serve.work.wait(0.05)
 
     def close(self):

@@ -719,7 +719,7 @@ class FakeServe:
         self._lock = threading.Lock()
 
     def submit(self, tokens, max_new=32, temperature=0.0, eos_id=-1,
-               frontend=None):
+               frontend=None, on_token=None, session_id=None):
         with self._lock:
             self._rid += 1
             req = Request(self._rid, np.asarray(tokens, np.int32), max_new)
@@ -727,6 +727,9 @@ class FakeServe:
         self.queue.put(req)
         self.work.set()
         return req
+
+    def pending(self):
+        return self.queue.qsize()
 
     def step(self):
         if self.gate is not None and not self.gate.is_set():
@@ -748,7 +751,9 @@ class FakeServe:
 
     def stats(self):
         return {"active_slots": 0, "n_slots": self.n_slots,
-                "queued": self.queue.qsize(), "max_len": 64}
+                "queued": self.queue.qsize(), "max_len": 64,
+                "occupancy": 0.0, "pinned_sessions": 0,
+                "prefix_hits": 0, "prefix_misses": 0}
 
 
 def test_gateway_close_joins_step_loop():

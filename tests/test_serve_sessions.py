@@ -1,0 +1,311 @@
+"""Session-affine serving data path: chunked prefill correctness (incl.
+EOS mid-chunk), KV-session pinning/resume/eviction edge cases, the
+gateway's occupancy-aware load signal, and the client-side soft-affinity
+layer (prefer_instance + SessionAffinity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.fabric import SessionAffinity
+from repro.fabric.balancer import prefer_instance
+from repro.models import Model, unzip
+from repro.serve.engine import ServeEngine
+from repro.services import ServingGateway
+
+CFG = configs.reduced("qwen1.5-0.5b").replace(compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    m = Model(CFG)
+    params, _ = unzip(m.init(jax.random.PRNGKey(0)))
+    return m, params
+
+
+def make_engine(m, params, **kw):
+    # fp32 cache: chunked-vs-monolithic parity must not hinge on bf16
+    # rounding of the cached K/V
+    kw.setdefault("cache_dtype", jnp.float32)
+    kw.setdefault("max_len", 64)
+    return ServeEngine(m, params, **kw)
+
+
+# ---------------------------------------------------------------- chunked
+def test_chunked_prefill_matches_monolithic(model_and_params):
+    """A prompt prefilled in fixed-size chunks (last chunk padded) must
+    decode exactly the tokens of one monolithic prefill pass."""
+    m, params = model_and_params
+    prompt = np.arange(1, 20)              # 19 tokens: 3 chunks, pad 5
+    mono = make_engine(m, params, n_slots=2)
+    want = mono.generate([prompt], max_new=8)[0]
+
+    chunked = make_engine(m, params, n_slots=2, chunk_tokens=8)
+    got = chunked.generate([prompt], max_new=8)[0]
+    assert got == want
+
+
+def test_chunked_interleaves_with_decode(model_and_params):
+    """Chunked prefill of one slot must not disturb decode of another:
+    outputs equal the isolated single-slot run."""
+    m, params = model_and_params
+    p_a, p_b = np.arange(1, 7), np.arange(3, 25)
+    alone = make_engine(m, params, n_slots=1, chunk_tokens=8)
+    want_a = alone.generate([p_a], max_new=6)[0]
+    want_b = alone.generate([p_b], max_new=6)[0]
+
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8)
+    ra = eng.submit(p_a, max_new=6)
+    rb = eng.submit(p_b, max_new=6)
+    eng.drain()
+    assert ra.out_tokens == want_a
+    assert rb.out_tokens == want_b
+
+
+def test_eos_on_chunked_prefill_first_token(model_and_params):
+    """EOS sampled from the *prefill* chunk itself (first emitted token)
+    must finish the request immediately and free the slot."""
+    m, params = model_and_params
+    prompt = np.arange(1, 20)
+    probe = make_engine(m, params, n_slots=1, chunk_tokens=8)
+    toks = probe.generate([prompt], max_new=4)[0]
+
+    eng = make_engine(m, params, n_slots=1, chunk_tokens=8)
+    req = eng.submit(prompt, max_new=4, eos_id=toks[0])
+    eng.drain()
+    assert req.out_tokens == toks[:1]
+    assert req.done_event.is_set()
+    assert eng.stats()["active_slots"] == 0
+    # the freed slot is immediately reusable for a full generation
+    assert eng.generate([prompt], max_new=4)[0] == toks
+
+
+def test_eos_mid_decode_after_chunked_prefill(model_and_params):
+    m, params = model_and_params
+    prompt = np.arange(1, 20)
+    probe = make_engine(m, params, n_slots=1, chunk_tokens=8)
+    toks = probe.generate([prompt], max_new=6)[0]
+    # the emitted token whose FIRST occurrence is latest: maximizes the
+    # chance the EOS cut lands mid-decode, whatever the tiny random
+    # model happens to emit
+    eos = max(set(toks), key=toks.index)
+    k = toks.index(eos)
+
+    eng = make_engine(m, params, n_slots=1, chunk_tokens=8)
+    req = eng.submit(prompt, max_new=6, eos_id=eos)
+    eng.drain()
+    assert req.out_tokens == toks[:k + 1]
+
+
+# ---------------------------------------------------------------- sessions
+def test_session_resume_matches_fresh_prefill(model_and_params):
+    """A follow-up turn resumed from pinned KV (suffix-only prefill)
+    must produce exactly the tokens of a from-scratch prefill."""
+    m, params = model_and_params
+    prompt = np.arange(1, 21)
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8, session_cap=4)
+    turn1 = eng.generate([prompt], max_new=4, session_ids=["conv"])[0]
+    follow = np.concatenate([prompt, np.asarray(turn1, np.int32),
+                             np.asarray([7, 9], np.int32)])
+
+    fresh = make_engine(m, params, n_slots=2, chunk_tokens=8)
+    want = fresh.generate([follow], max_new=4)[0]
+
+    got = eng.generate([follow], max_new=4, session_ids=["conv"])[0]
+    assert got == want
+    st = eng.stats()
+    assert st["prefix_hits"] == 1
+    # everything up to the last emitted token of turn 1 was reused
+    assert st["prefix_tokens_saved"] == len(prompt) + len(turn1) - 1
+
+
+def test_stale_prefix_misses_and_recovers(model_and_params):
+    """A follow-up whose prompt does NOT extend the cached history must
+    evict the stale session and full-prefill — correctness never depends
+    on the cache."""
+    m, params = model_and_params
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8, session_cap=4)
+    eng.generate([np.arange(1, 21)], max_new=4, session_ids=["conv"])
+
+    other = np.arange(5, 30)               # unrelated prompt, same sid
+    fresh = make_engine(m, params, n_slots=2, chunk_tokens=8)
+    want = fresh.generate([other], max_new=4)[0]
+    got = eng.generate([other], max_new=4, session_ids=["conv"])[0]
+    assert got == want
+    st = eng.stats()
+    assert st["prefix_hits"] == 0
+    assert st["prefix_misses"] == 2        # both turns missed
+    assert st["session_evictions"] == 1    # the stale pin was dropped
+
+
+def test_eviction_racing_follow_up(model_and_params):
+    """A follow-up arriving after its session was LRU-evicted (slot
+    pressure from fresh conversations) degrades to a miss + full
+    prefill with identical output."""
+    m, params = model_and_params
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8, session_cap=2)
+    prompt = np.arange(1, 15)
+    t1 = eng.generate([prompt], max_new=3, session_ids=["victim"])[0]
+    # flood: enough fresh sessions to evict "victim" from both the
+    # 2-entry table and its slot
+    for i in range(3):
+        eng.generate([np.arange(2 + i, 20 + i)], max_new=3,
+                     session_ids=[f"flood{i}"])
+    assert "victim" not in eng.sessions
+    follow = np.concatenate([prompt, np.asarray(t1, np.int32),
+                             np.asarray([4], np.int32)])
+    fresh = make_engine(m, params, n_slots=2, chunk_tokens=8)
+    want = fresh.generate([follow], max_new=3)[0]
+    hits_before = eng.stats()["prefix_hits"]
+    got = eng.generate([follow], max_new=3, session_ids=["victim"])[0]
+    assert got == want
+    assert eng.stats()["prefix_hits"] == hits_before   # no phantom hit
+
+
+def test_all_slots_pinned_no_starvation(model_and_params):
+    """Every slot pinned by an idle session must not starve fresh
+    requests: the LRU pin is evicted and the request runs."""
+    m, params = model_and_params
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8, session_cap=4)
+    eng.generate([np.arange(1, 10), np.arange(2, 12)], max_new=3,
+                 session_ids=["a", "b"])
+    st = eng.stats()
+    assert st["pinned_sessions"] == 2 and st["active_slots"] == 0
+
+    fresh_prompt = np.arange(4, 18)
+    req = eng.submit(fresh_prompt, max_new=3)
+    eng.drain()
+    assert len(req.out_tokens) == 3
+    # LRU ("a", the older pin) was sacrificed; "b" survived
+    assert "a" not in eng.sessions and "b" in eng.sessions
+
+
+def test_drain_with_pinned_sessions_terminates(model_and_params):
+    """Pinned sessions hold no slot_req: drain() must return with
+    sessions still resident (a pinned engine is an idle engine)."""
+    m, params = model_and_params
+    eng = make_engine(m, params, n_slots=2, chunk_tokens=8, session_cap=4)
+    eng.generate([np.arange(1, 10)], max_new=3, session_ids=["keep"])
+    eng.drain()                            # must not spin forever
+    st = eng.stats()
+    assert st["pinned_sessions"] == 1
+    assert st["active_slots"] == 0 and st["occupancy"] == 0.0
+    # and the pin is still usable afterwards
+    assert "keep" in eng.sessions
+
+
+def test_sessions_disabled_on_unchunkable_model(model_and_params,
+                                                monkeypatch):
+    """chunk_tokens/session_cap are silently ignored when the model
+    cannot continue prefill at an offset — the engine falls back to
+    monolithic prefill and stateless serving."""
+    m, params = model_and_params
+    monkeypatch.setattr(type(m), "supports_chunked_prefill",
+                        property(lambda self: False))
+    eng = ServeEngine(m, params, max_len=64, n_slots=2,
+                      chunk_tokens=8, session_cap=4,
+                      cache_dtype=jnp.float32)
+    assert eng.chunk == 0 and eng.session_cap == 0
+    out = eng.generate([np.arange(1, 8)], max_new=3, session_ids=["x"])[0]
+    assert len(out) == 3
+    st = eng.stats()
+    assert st["pinned_sessions"] == 0
+    assert st["prefix_hits"] == 0 and st["prefix_misses"] == 0
+
+
+# ---------------------------------------------------------------- gateway
+class _StubServe:
+    """Just enough ServeEngine surface for ServingGateway._load."""
+    def __init__(self, active, queued, pinned):
+        self._s = {"active_slots": active, "queued": queued,
+                   "pinned_sessions": pinned}
+
+    def stats(self):
+        return dict(self._s)
+
+
+def test_gateway_load_counts_occupancy():
+    """Regression: a gateway with a full batch and an empty queue must
+    not report near-idle — active slots dominate the balancing signal."""
+    gw = ServingGateway.__new__(ServingGateway)   # formula-only unit test
+    gw.serve = _StubServe(active=4, queued=0, pinned=0)
+    busy = ServingGateway._load(gw)
+    gw.serve = _StubServe(active=0, queued=0, pinned=0)
+    idle = ServingGateway._load(gw)
+    assert idle == 0.0
+    assert busy >= 4.0, \
+        "full batch with empty queue reported as near-idle"
+
+
+def test_gateway_load_weights_pinned_sessions():
+    """Pinned sessions hold no slot_req but admitting there costs an
+    eviction: they must raise load, at less than a live slot's weight."""
+    gw = ServingGateway.__new__(ServingGateway)
+    gw.serve = _StubServe(active=0, queued=0, pinned=4)
+    pinned = ServingGateway._load(gw)
+    gw.serve = _StubServe(active=4, queued=0, pinned=0)
+    active = ServingGateway._load(gw)
+    assert 0.0 < pinned < active
+
+
+# ---------------------------------------------------------------- affinity
+class _Rep:
+    def __init__(self, iid):
+        self.iid = iid
+
+
+def test_prefer_instance_ordering():
+    ranked = [_Rep("a"), _Rep("b"), _Rep("c")]
+    assert prefer_instance(ranked, None) is ranked
+    out = prefer_instance(ranked, "b")
+    assert [r.iid for r in out] == ["b", "a", "c"]
+    # unknown iid: ranking untouched (dead/evicted replica fallback)
+    assert [r.iid for r in prefer_instance(ranked, "zz")] == ["a", "b", "c"]
+    assert prefer_instance([], "a") == []
+
+
+class _FakePool:
+    """Scripted pool: serves from ``homes`` (prefer honored only when
+    still listed), recording what prefer= each call carried."""
+    def __init__(self, default_iid):
+        self.default = default_iid
+        self.live = {default_iid}
+        self.prefers = []
+
+    def call_routed(self, rpc, arg=None, prefer=None, **kw):
+        self.prefers.append(prefer)
+        iid = prefer if prefer in self.live else self.default
+        return {"ok": True}, iid
+
+
+def test_session_affinity_hit_miss_move():
+    pool = _FakePool("r1")
+    aff = SessionAffinity(pool)
+    _, iid = aff.call_routed("s1", "gen.generate", {})
+    assert iid == "r1" and aff.misses == 1          # first turn: no map
+    _, iid = aff.call_routed("s1", "gen.generate", {})
+    assert iid == "r1" and aff.hits == 1
+    assert pool.prefers == [None, "r1"]
+
+    # preferred replica dies: the call lands elsewhere and the session
+    # is re-homed (a move, not an error)
+    pool.default = "r2"
+    pool.live = {"r2"}
+    _, iid = aff.call_routed("s1", "gen.generate", {})
+    assert iid == "r2" and aff.moves == 1
+    assert aff.lookup("s1") == "r2"
+
+    aff.forget("s1")
+    assert aff.lookup("s1") is None
+    st = aff.stats()
+    assert (st["hits"], st["misses"], st["moves"]) == (1, 1, 1)
+
+
+def test_session_affinity_lru_capacity():
+    pool = _FakePool("r1")
+    aff = SessionAffinity(pool, capacity=2)
+    for sid in ("a", "b", "c"):
+        aff.call_routed(sid, "gen.generate", {})
+    assert aff.lookup("a") is None                  # LRU-dropped
+    assert aff.lookup("b") == "r1" and aff.lookup("c") == "r1"

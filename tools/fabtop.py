@@ -99,6 +99,21 @@ def render(snaps: list, prevs: dict, dt: float, verbose: bool) -> str:
                          f"admitted={gen.get('admitted')} "
                          f"shed={gen.get('shed')} "
                          f"ema_service_ms={gen.get('ema_service_ms', 0):.1f}")
+            # serving-path pressure: slot occupancy as a bar gauge, the
+            # KV-session table and its reuse effectiveness next to it
+            occ = float(gen.get("occupancy", 0.0))
+            filled = int(round(occ * 10))
+            bar = "#" * filled + "." * (10 - filled)
+            lines.append(f"  {DIM}serve{RESET}      "
+                         f"occupancy=[{bar}] {occ * 100:3.0f}% "
+                         f"pinned={gen.get('pinned_sessions', 0)}"
+                         f"/{gen.get('session_capacity', 0)} "
+                         f"prefix_hit_rate="
+                         f"{float(gen.get('prefix_hit_rate', 0.0)):.2f} "
+                         f"(hits={gen.get('prefix_hits', 0)} "
+                         f"miss={gen.get('prefix_misses', 0)} "
+                         f"saved={gen.get('prefix_tokens_saved', 0)}tok "
+                         f"evict={gen.get('session_evictions', 0)})")
     return "\n".join(lines)
 
 
